@@ -1,0 +1,12 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  bench_latency      Fig. 4 (latency x topology, acked) + Fig. 5 (async speedup)
+  bench_throughput   Fig. 6 (throughput x topology)
+  bench_jacobi       Fig. 7 (kernels x grid) + Fig. 8 (multi-node spread)
+  bench_utilization  Table I analogue (per-GAScore-stage + kernel costs)
+  roofline           §Roofline generator (reads dryrun_results.jsonl)
+
+Each module prints ``name,us_per_call,derived`` CSV rows;
+``python -m benchmarks.run`` drives them all (comm benchmarks run in
+subprocesses with an 8-device host platform to emulate a cluster).
+"""

@@ -1,0 +1,20 @@
+"""Shared timing helper."""
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, iters: int = 20, warmup: int = 3):
+    """Median wall-time (us) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]

@@ -1,0 +1,122 @@
+import os
+
+if __name__ == "__main__":
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+
+"""Figs. 4 & 5: AM latency across placement topologies.
+
+Measured: wall-time per AM on the emulated 8-kernel CPU cluster (mesh
+(2, 4) = 2 "pods" x 4 chips), per AM class x payload x topology, for
+acked (TCP-analogue) and async (UDP-analogue) transports, plus the
+HUMboldt two-sided baseline.  Derived column: modeled TPU-target latency
+from the transport link model (ICI/DCN), which is what the paper's
+absolute numbers correspond to.
+
+Reproduced qualitative claims: one-sided < two-sided; async < acked
+(Fig. 5's UDP speedup); LOCAL < ICI < DCN; latency grows with payload
+above a constant floor.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import handlers as hd
+from repro.core import humboldt, ops
+from repro.core.address_space import GlobalAddressSpace
+from repro.core.state import ShoalContext
+from repro.runtime import TCP, UDP, LinkClass, model_latency_s
+from repro.runtime.topology import make_mesh
+
+from benchmarks._timing import time_fn
+
+PAYLOAD_BYTES = [8, 64, 512, 4096]
+N = 8
+
+
+def patterns():
+    # (name, pattern, link class) on the (2,4) pod mesh: kernels 0-3 pod0
+    return [
+        ("same-kernel", [(i, i) for i in range(N)], LinkClass.LOCAL),
+        ("intra-pod", [(0, 1), (1, 2), (2, 3), (3, 0),
+                       (4, 5), (5, 6), (6, 7), (7, 4)], LinkClass.ICI),
+        ("inter-pod", [(i, (i + 4) % 8) for i in range(8)], LinkClass.DCN),
+    ]
+
+
+def main():
+    mesh = make_mesh((2, 4), ("pod", "chip"))
+    rows = []
+    for transport, tname in ((TCP, "acked"), (UDP, "async")):
+        ctx = ShoalContext(mesh=mesh, axes=("pod", "chip"),
+                           transport=transport, segment_words=4096)
+        gas = GlobalAddressSpace(ctx)
+        state0 = gas.make_global_state()
+        for topo, pattern, link in patterns():
+            for pb in PAYLOAD_BYTES:
+                nw = pb // 4
+
+                def prog_long(st):
+                    pay = jnp.ones((nw,), jnp.float32)
+                    st = ops.put_long(ctx, st, pay, pattern, dst_addr=0,
+                                      token=1,
+                                      asynchronous=not transport.acked)
+                    return st
+
+                fn = jax.jit(gas.spmd(prog_long))
+                us = time_fn(fn, state0)
+                model_us = model_latency_s(transport, link, pb) * 1e6
+                rows.append((f"lat/long/{tname}/{topo}/{pb}B", us, model_us))
+
+            # header-only short AM
+            def prog_short(st):
+                return ops.put_short(ctx, st, pattern, token=1,
+                                     asynchronous=not transport.acked)
+
+            us = time_fn(jax.jit(gas.spmd(prog_short)), state0)
+            model_us = model_latency_s(transport, link, 0) * 1e6
+            rows.append((f"lat/short/{tname}/{topo}/0B", us, model_us))
+
+            # medium AM
+            def prog_med(st):
+                pay = jnp.ones((128,), jnp.float32)
+                st, _ = ops.put_medium(ctx, st, pay, pattern, token=1,
+                                       asynchronous=not transport.acked)
+                return st
+
+            us = time_fn(jax.jit(gas.spmd(prog_med)), state0)
+            model_us = model_latency_s(transport, link, 512) * 1e6
+            rows.append((f"lat/medium/{tname}/{topo}/512B", us, model_us))
+
+    # HUMboldt two-sided baseline (Fig. 4 context; 4 link traversals)
+    ctx = ShoalContext(mesh=mesh, axes=("pod", "chip"), transport=TCP,
+                       segment_words=4096)
+    gas = GlobalAddressSpace(ctx)
+    state0 = gas.make_global_state()
+    for topo, pattern, link in patterns():
+        for pb in [8, 512, 4096]:
+            nw = pb // 4
+
+            def prog_h(st):
+                st, _ = humboldt.sendrecv(ctx, st, jnp.ones((nw,), jnp.float32),
+                                          pattern, token=1)
+                return st
+
+            us = time_fn(jax.jit(gas.spmd(prog_h)), state0)
+            model_us = model_latency_s(TCP, link, pb,
+                                       hops=humboldt.HOPS_PER_MESSAGE) * 1e6
+            rows.append((f"lat/humboldt/two-sided/{topo}/{pb}B", us, model_us))
+
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived:.3f}")
+
+    # Fig. 5 analogue: async speedup over acked, per topology (modeled)
+    for topo, _, link in patterns():
+        for pb in PAYLOAD_BYTES:
+            s = (model_latency_s(TCP, link, pb)
+                 / model_latency_s(UDP, link, pb))
+            print(f"speedup/async-vs-acked/{topo}/{pb}B,0.0,{s:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""§Roofline generator: three roofline terms per (arch x shape x mesh).
+
+Reads the dry-run JSONL (launch/dryrun.py) and computes, per cell:
+
+  compute term    = HLO_FLOPs / (chips * peak)         [s]
+  memory term     = HLO_bytes / (chips * HBM bw)       [s]
+  collective term = wire_bytes / (links * link bw)     [s]
+
+Constants: TPU-v5e-class 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link
+ICI (25 GB/s assumed for the DCN pod axis).  cost_analysis numbers are
+already per-device (SPMD-partitioned); `dot_flops_weighted` is the
+trip-count-corrected matmul FLOP count parsed from the optimized HLO
+(XLA's cost analysis counts while bodies once — see
+launch/hlo_analysis.py), and we take max(raw, weighted).
+
+MODEL_FLOPS = 6*N*D for training (N = active non-embedding params, D =
+tokens/step) or 2*N*B per decoded-token batch; the ratio against
+compiled FLOPs exposes remat/dispatch waste.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from repro import configs
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+DCN_BW = 25e9
+
+
+def active_params(cfg) -> float:
+    """Analytic non-embedding *active* param count (MoE: top-k+shared)."""
+    d, L = cfg.d_model, cfg.n_layers
+    dh = cfg.dh
+    H, K = cfg.n_heads, cfg.n_kv_heads
+    per_layer = 0.0
+    if cfg.family == "ssm":
+        pd = int(d * cfg.mlstm_pf)
+        mlstm = d * pd * 2 + 3 * pd * pd + pd * d
+        slstm = d * 4 * d + (d // cfg.n_heads) * 4 * (d // cfg.n_heads) * cfg.n_heads \
+            + 2 * d * int(d * 4 / 3) + int(d * 4 / 3) * d
+        n_s = L // cfg.slstm_every if cfg.slstm_every else 0
+        return (L - n_s) * mlstm + n_s * slstm
+    if cfg.mla:
+        m = cfg.mla
+        attn = (d * m.q_lora + m.q_lora * H * (m.dh_nope + m.dh_rope)
+                + d * m.kv_lora + d * m.dh_rope
+                + m.kv_lora * H * (m.dh_nope + m.dh_v) + H * m.dh_v * d)
+    else:
+        attn = d * H * dh + 2 * d * K * dh + H * dh * d
+    if cfg.moe:
+        ff = 3 * d * cfg.moe.d_ff_expert * (cfg.moe.top_k + cfg.moe.n_shared)
+        dense_ff = 3 * d * cfg.d_ff
+        n_moe = L - cfg.first_k_dense
+        per = attn + ff
+        return n_moe * per + cfg.first_k_dense * (attn + dense_ff)
+    if cfg.family == "hybrid":
+        dr = cfg.dr
+        nb = cfg.n_heads
+        rglru = 2 * d * dr + 2 * nb * (dr // nb) ** 2 + dr * d + 3 * d * cfg.d_ff
+        attn_l = attn + 3 * d * cfg.d_ff
+        n_attn = sum(1 for i in range(L) if i % 3 == 2)
+        return (L - n_attn) * rglru + n_attn * attn_l
+    mlp = (2 if cfg.mlp == "gelu" else 3) * d * cfg.d_ff
+    return L * (attn + mlp)
+
+
+def analyze(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    cfg = configs.full(rec["arch"])
+    pd = rec["per_device"]
+    mesh = rec["mesh"]
+    chips = 1
+    for v in mesh.values():
+        chips *= v
+    flops_dev = max(pd["flops"], pd.get("dot_flops_weighted", 0.0))
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = pd["bytes_accessed"] / HBM_BW
+    link_bw = DCN_BW if rec["multi_pod"] else ICI_BW
+    t_coll = pd["collective_wire_bytes"] / link_bw
+
+    shape = rec["shape"]
+    from repro.configs.shapes import SHAPES
+    sp = SHAPES[shape]
+    n_active = active_params(cfg)
+    if sp.mode == "train":
+        model_flops = 6 * n_active * sp.seq_len * sp.global_batch
+    elif sp.mode == "prefill":
+        model_flops = 2 * n_active * sp.seq_len * sp.global_batch
+    else:
+        model_flops = 2 * n_active * sp.global_batch
+    model_flops_dev = model_flops / chips
+    useful = model_flops_dev / flops_dev if flops_dev else 0.0
+
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])
+    total = max(t_compute, t_memory, t_coll)
+    frac = (model_flops_dev / PEAK_FLOPS) / total if total else 0.0
+    return {
+        "arch": rec["arch"], "shape": shape,
+        "mesh": "2x16x16" if rec["multi_pod"] else "16x16",
+        "backend": rec.get("backend", "xla"),
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant[0],
+        "bound_s": total,
+        "model_flops_dev": model_flops_dev, "hlo_flops_dev": flops_dev,
+        "useful_ratio": useful, "roofline_frac": frac,
+        "peak_gb": pd["peak_bytes"] / 1e9,
+        "fits_16gb": pd["peak_bytes"] < 16e9,
+    }
+
+
+def main(path="dryrun_results.jsonl"):
+    recs = [json.loads(l) for l in open(path)]
+    seen = {}
+    for r in recs:   # last record wins (re-runs override)
+        key = (r["arch"], r["shape"], r["multi_pod"], r.get("backend", "xla"))
+        seen[key] = r
+    out = []
+    for r in seen.values():
+        a = analyze(r)
+        if a:
+            out.append(a)
+    out.sort(key=lambda a: (a["arch"], a["shape"], a["mesh"]))
+    for a in out:
+        print(f"roofline/{a['arch']}/{a['shape']}/{a['mesh']}"
+              f",{a['bound_s']*1e6:.1f}"
+              f",dom={a['dominant']};tc={a['t_compute_s']*1e3:.2f}ms"
+              f";tm={a['t_memory_s']*1e3:.2f}ms"
+              f";tx={a['t_collective_s']*1e3:.2f}ms"
+              f";useful={a['useful_ratio']:.2f}"
+              f";frac={a['roofline_frac']:.3f}"
+              f";mem={a['peak_gb']:.1f}GB")
+    return out
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

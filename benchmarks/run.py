@@ -1,0 +1,56 @@
+"""Drive all benchmarks; print ``name,us_per_call,derived`` CSV.
+
+Comm/Jacobi benchmarks need a multi-device host platform, so each runs
+in its own subprocess with XLA_FLAGS=...device_count=8 (the main process
+keeps the single real device, and the production 512-device mesh exists
+only inside dry-run processes).  The roofline section is only emitted if
+a dry-run results file exists.
+"""
+
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
+
+SUBPROCESS_BENCHES = [
+    ("benchmarks.bench_latency", 8),
+    ("benchmarks.bench_throughput", 8),
+    ("benchmarks.bench_jacobi", 8),
+]
+INPROCESS_BENCHES = ["benchmarks.bench_utilization"]
+
+
+def run_sub(mod: str, devices: int) -> int:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + REPO
+    proc = subprocess.run([sys.executable, "-m", mod], env=env,
+                          capture_output=True, text=True, cwd=REPO)
+    sys.stdout.write(proc.stdout)
+    if proc.returncode != 0:
+        sys.stdout.write(f"{mod},FAILED,rc={proc.returncode}\n")
+        sys.stderr.write(proc.stderr[-2000:] + "\n")
+    return proc.returncode
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    rc = 0
+    for mod, devs in SUBPROCESS_BENCHES:
+        rc |= run_sub(mod, devs)
+    for mod in INPROCESS_BENCHES:
+        rc |= run_sub(mod, 1)
+    results = os.path.join(REPO, "dryrun_results.jsonl")
+    if os.path.exists(results):
+        rc |= run_sub("benchmarks.roofline", 1)
+    else:
+        print("roofline,SKIPPED,no dryrun_results.jsonl (run "
+              "scripts/run_dryrun_sweep.sh)")
+    if rc:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Serving example: batched requests with continuous-batching lanes.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import sys
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    sys.exit(serve_main(["--arch", "qwen2-1.5b", "--reduced",
+                         "--requests", "6", "--lanes", "2",
+                         "--max-new", "12"]))

@@ -1,0 +1,90 @@
+"""Hillclimb driver: run one dry-run cell with config/trainer overrides
+and print the roofline deltas vs the baseline JSONL.
+
+    PYTHONPATH=src python scripts/hillclimb.py --arch tinyllama-1.1b \
+        --shape train_4k --set tp=False --tag no-tp
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--backend", default="xla")
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="ModelConfig overrides, e.g. tp=False remat=full")
+    ap.add_argument("--tag", default="hc")
+    ap.add_argument("--out", default="dryrun_hillclimb.jsonl")
+    ap.add_argument("--baseline", default="dryrun_baseline.jsonl")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import run_cell          # sets XLA_FLAGS first
+    from repro import configs
+
+    cfg = configs.full(args.arch)
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        cur = getattr(cfg, k)
+        if isinstance(cur, bool):
+            v = v in ("1", "true", "True")
+        elif isinstance(cur, int):
+            v = int(v)
+        elif isinstance(cur, float):
+            v = float(v)
+        overrides[k] = v
+    cfg = dataclasses.replace(cfg, **overrides)
+
+    rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                   comm_backend=args.backend, override_cfg=cfg,
+                   microbatches=args.microbatches)
+    rec["tag"] = args.tag
+    rec["overrides"] = overrides
+    with open(args.out, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    if rec["status"] != "ok":
+        print("FAILED:", rec.get("error"))
+        return 1
+
+    # compare vs baseline
+    base = None
+    try:
+        for line in open(args.baseline):
+            r = json.loads(line)
+            if (r["arch"], r["shape"], r["multi_pod"], r.get("backend")) == \
+               (args.arch, args.shape, args.multi_pod, "xla") \
+               and r["status"] == "ok":
+                base = r
+    except FileNotFoundError:
+        pass
+    pd = rec["per_device"]
+    print(f"[{args.tag}] {args.arch} x {args.shape} "
+          f"{'2pod' if args.multi_pod else '1pod'}")
+
+    def fmt(d):
+        return (f"flops={max(d['flops'], d.get('dot_flops_weighted', 0))/1e12:.2f}TF "
+                f"bytes={d['bytes_accessed']/1e9:.1f}GB "
+                f"wire={d['collective_wire_bytes']/1e9:.2f}GB "
+                f"peak={d['peak_bytes']/1e9:.2f}GB")
+
+    if base:
+        print("  base:", fmt(base["per_device"]))
+    print("  new: ", fmt(pd))
+    if base:
+        b, n = base["per_device"], pd
+        for k, lbl in (("collective_wire_bytes", "wire"),
+                       ("peak_bytes", "peak"), ("bytes_accessed", "hbm")):
+            if b[k]:
+                print(f"  {lbl}: {n[k]/b[k]:.3f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

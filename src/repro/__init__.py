@@ -1,0 +1,18 @@
+"""Shoal-JAX: a PGAS Active-Message substrate + LM training/serving
+framework for TPU pods.
+
+Reproduction and pod-scale extension of "A PGAS Communication Library
+for Heterogeneous Clusters" (Sharma & Chow, 2021).  See DESIGN.md for
+the FPGA->TPU adaptation and EXPERIMENTS.md for the dry-run, roofline,
+and perf-iteration results.
+
+Subpackages:
+  core       the Shoal library (AMs, GAScore, ops, collectives, HUMboldt)
+  runtime    Galapagos analogue (topology, transports, routing)
+  models     the 10 assigned architectures
+  data/optim/checkpoint/training/serving   framework substrates
+  kernels    Pallas TPU kernels + oracles (incl. the RDMA GAScore)
+  apps       the paper's Jacobi application
+  configs    exact assigned configs + reduced smoke configs
+  launch     production mesh, 512-chip dry-run, train/serve drivers
+"""

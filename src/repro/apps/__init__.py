@@ -1,0 +1,3 @@
+from repro.apps.jacobi import JacobiApp
+
+__all__ = ["JacobiApp"]

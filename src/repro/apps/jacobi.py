@@ -1,0 +1,157 @@
+"""The Jacobi stencil application on Shoal (paper Sec. IV-C).
+
+The grid (N x N) is row-partitioned over kernels.  Each iteration:
+
+  1. every kernel one-sided-puts its first/last owned row into its
+     neighbors' halo slots (Shoal Long puts — *not* send/recv pairs;
+     boundary kernels simply aren't in the pattern),
+  2. waits for its own halos' replies (wait_replies = GASNet quiet),
+  3. runs the von Neumann stencil over its band (optionally the Pallas
+     kernel from :mod:`repro.kernels.jacobi`).
+
+Segment layout per kernel: [0, N) = top halo row, [N, 2N) = bottom halo.
+
+The paper's footnote-2 limitation — at grid 4096 a halo row exceeds the
+9000-byte jumbo frame and their runs *fail* — is handled here by the
+transparent >MTU segmentation in :func:`repro.core.ops.put_long`; the
+benchmark runs exactly that configuration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import handlers as hd
+from repro.core import ops
+from repro.core.gascore import dataclasses_replace
+from repro.core.state import PgasState, ShoalContext
+from repro.runtime import TCP
+from repro.runtime.topology import make_cpu_mesh
+
+
+@dataclasses.dataclass
+class JacobiApp:
+    n: int                    # grid is n x n
+    kernels: int
+    iters: int
+    transport: object = TCP
+    use_pallas: bool = False
+
+    def __post_init__(self):
+        assert self.n % self.kernels == 0
+        self.rows = self.n // self.kernels
+        self.mesh = make_cpu_mesh(self.kernels, ("kernel",))
+        self.ctx = ShoalContext(mesh=self.mesh, axes=("kernel",),
+                                transport=self.transport,
+                                segment_words=2 * self.n)
+        k = self.kernels
+        self.up = [(i, i - 1) for i in range(1, k)]      # send top row up
+        self.down = [(i, i + 1) for i in range(k - 1)]   # send bottom row down
+
+    # -- one iteration (runs inside shard_map) --------------------------------
+
+    def _halo_exchange(self, st: PgasState, block: jnp.ndarray) -> PgasState:
+        n = self.n
+        if self.kernels == 1:
+            return st
+        # my top row -> upper neighbor's *bottom* halo [n, 2n)
+        st = ops.put_long(self.ctx, st, block[0], self.up, dst_addr=n,
+                          handler=hd.H_WRITE, token=1)
+        # my bottom row -> lower neighbor's *top* halo [0, n)
+        st = ops.put_long(self.ctx, st, block[-1], self.down, dst_addr=0,
+                          handler=hd.H_WRITE, token=2)
+        if self.transport.acked:
+            import math
+            pkts = max(1, math.ceil(n / self.ctx.transport.max_packet_words))
+            me = self.ctx.my_id()
+            has_down = (me < self.kernels - 1).astype(jnp.int32)
+            has_up = (me > 0).astype(jnp.int32)
+            # replies for token 1 come from puts I sent up, etc.
+            st = ops.wait_replies(self.ctx, st, 1, pkts * has_up)
+            st = ops.wait_replies(self.ctx, st, 2, pkts * has_down)
+        return st
+
+    def _stencil(self, block_pad: jnp.ndarray, kid) -> jnp.ndarray:
+        """block_pad: (rows+2, n) with halo rows attached.  (The Pallas
+        variant of this loop is benchmarked separately in
+        benchmarks/bench_utilization.py; on the CPU host the jnp form is
+        what XLA vectorizes best, mirroring the paper's SW/HW split.)"""
+        up = block_pad[:-2]
+        down = block_pad[2:]
+        mid = block_pad[1:-1]
+        left = jnp.pad(mid[:, :-1], ((0, 0), (1, 0)))
+        right = jnp.pad(mid[:, 1:], ((0, 0), (0, 1)))
+        stencil = 0.25 * (up + down + left + right)
+        rows, n = mid.shape
+        grow = kid * rows + jax.lax.broadcasted_iota(jnp.int32, (rows, n), 0)
+        gcol = jax.lax.broadcasted_iota(jnp.int32, (rows, n), 1)
+        interior = ((grow > 0) & (grow < self.n - 1)
+                    & (gcol > 0) & (gcol < n - 1))
+        return jnp.where(interior, stencil.astype(mid.dtype), mid)
+
+    def _iteration(self, st: PgasState, block: jnp.ndarray):
+        n = self.n
+        kid = self.ctx.my_id()
+        st = self._halo_exchange(st, block)
+        top_halo = st.segment[:n]
+        bot_halo = st.segment[n:2 * n]
+        # boundary kernels have no halo: use zero rows (masked anyway)
+        top = jnp.where(kid > 0, top_halo, 0.0)
+        bot = jnp.where(kid < self.kernels - 1, bot_halo, 0.0)
+        pad = jnp.concatenate([top[None], block, bot[None]], axis=0)
+        block = self._stencil(pad, kid)
+        st = ops.barrier(self.ctx, st)
+        return st, block
+
+    # -- host-level driver ------------------------------------------------------
+
+    def build(self):
+        """Returns a jitted function (grid_blocks) -> grid_blocks running
+        all iterations; grid_blocks: (kernels, rows, n) sharded."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        ctx = self.ctx
+
+        def per_kernel(st, block):
+            st = jax.tree.map(lambda x: x[0], st)
+            block = block[0]
+
+            def body(carry, _):
+                st, blk = carry
+                st, blk = self._iteration(st, blk)
+                return (st, blk), ()
+
+            (st, block), _ = jax.lax.scan(body, (st, block), None,
+                                          length=self.iters)
+            return (jax.tree.map(lambda x: x[None], st), block[None])
+
+        spec = P(("kernel",))
+        fn = jax.shard_map(per_kernel, mesh=self.mesh,
+                           in_specs=(spec, spec), out_specs=(spec, spec))
+        return jax.jit(fn)
+
+    def run(self, grid: np.ndarray):
+        """Run on a host grid (n, n); returns the final grid."""
+        from repro.core.address_space import GlobalAddressSpace
+
+        gas = GlobalAddressSpace(self.ctx)
+        st = gas.make_global_state()
+        blocks = jnp.asarray(grid.reshape(self.kernels, self.rows, self.n))
+        fn = self.build()
+        st, out = fn(st, blocks)
+        return np.asarray(out).reshape(self.n, self.n)
+
+
+def jacobi_reference(grid: np.ndarray, iters: int) -> np.ndarray:
+    """Single-kernel oracle."""
+    from repro.kernels.jacobi.ref import jacobi_step_ref
+    x = jnp.asarray(grid)
+    step = jax.jit(jacobi_step_ref)
+    for _ in range(iters):
+        x = step(x)
+    return np.asarray(x)

@@ -1,0 +1,40 @@
+"""Assigned architecture configs (exact, from public literature) plus
+reduced same-family smoke configs.  ``get(name)`` returns the module;
+each module exposes ``full()`` and ``reduced()`` -> ModelConfig.
+"""
+
+import importlib
+
+ARCH_IDS = [
+    "dbrx_132b",
+    "deepseek_v2_236b",
+    "qwen2_1_5b",
+    "tinyllama_1_1b",
+    "deepseek_7b",
+    "qwen2_72b",
+    "musicgen_medium",
+    "llama_3_2_vision_90b",
+    "recurrentgemma_2b",
+    "xlstm_350m",
+]
+
+# CLI ids (hyphenated, as assigned) -> module names
+CLI_IDS = {i.replace("_", "-"): i for i in ARCH_IDS}
+CLI_IDS.update({
+    "qwen2-1.5b": "qwen2_1_5b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "llama-3.2-vision-90b": "llama_3_2_vision_90b",
+})
+
+
+def get(name: str):
+    mod = CLI_IDS.get(name, name.replace("-", "_").replace(".", "_"))
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def full(name: str):
+    return get(name).full()
+
+
+def reduced(name: str):
+    return get(name).reduced()

@@ -1,0 +1,28 @@
+"""Assigned input shapes.  ``train_*`` lowers train_step; ``prefill_*``
+lowers the prompt pass; ``decode_*`` / ``long_*`` lower serve_step (one
+new token against a seq_len-deep cache).  ``long_500k`` applies only to
+sub-quadratic archs (cfg.sub_quadratic), per the assignment."""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                    # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable(cfg, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return cfg.sub_quadratic
+    return True

@@ -1,0 +1,25 @@
+"""Shoal: a PGAS Active-Message communication library for TPU pods.
+
+The paper's primary contribution, adapted FPGA-cluster -> TPU pod (see
+DESIGN.md Sec. 2 for the full mapping).  Public surface:
+
+* :mod:`repro.core.am`            -- AM wire format (Short/Medium/Long,
+  put/get, FIFO/memory, strided/vectored, async flag).
+* :mod:`repro.core.handlers`      -- receiver-side handler table + credits.
+* :mod:`repro.core.gascore`       -- the per-kernel AM engine (ingress/
+  egress datapaths; the GAScore of Fig. 3).
+* :mod:`repro.core.ops`           -- the user API: puts/gets/barrier/wait.
+* :mod:`repro.core.collectives`   -- ring collectives built on puts (the
+  trainer's ``shoal`` comm backend).
+* :mod:`repro.core.humboldt`      -- two-sided 4-phase baseline.
+* :mod:`repro.core.address_space` -- the partitioned global address space.
+"""
+
+from repro.core import am, collectives, gascore, handlers, humboldt, ops
+from repro.core.address_space import GlobalAddressSpace
+from repro.core.state import PgasState, ShoalContext
+
+__all__ = [
+    "am", "collectives", "gascore", "handlers", "humboldt", "ops",
+    "GlobalAddressSpace", "PgasState", "ShoalContext",
+]

@@ -1,0 +1,108 @@
+"""The partitioned global address space (paper Sec. II-A3).
+
+A ``GlobalAddressSpace`` names a global word array of
+``num_kernels * segment_words`` words; kernel *k* owns words
+``[k*segment_words, (k+1)*segment_words)``.  Locality is explicit: a
+global address resolves to (owner kernel, local offset), and only
+accesses to non-owned partitions become AMs — "this locality information
+is known to the programmer" (Sec. II-A3).
+
+Host-side helpers move data between a NumPy/global view and the
+per-device segments (sharded ``jax.Array``), which is how applications
+(e.g. Jacobi) load initial conditions and read results back.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.state import PgasState, ShoalContext
+
+
+@dataclasses.dataclass(frozen=True)
+class GlobalAddressSpace:
+    ctx: ShoalContext
+    dtype: jnp.dtype = jnp.float32
+
+    @property
+    def segment_words(self) -> int:
+        return self.ctx.segment_words
+
+    @property
+    def total_words(self) -> int:
+        return self.ctx.num_kernels * self.ctx.segment_words
+
+    # -- addressing -------------------------------------------------------
+
+    def owner_of(self, gaddr: int) -> int:
+        return gaddr // self.segment_words
+
+    def local_offset(self, gaddr: int) -> int:
+        return gaddr % self.segment_words
+
+    def global_addr(self, kernel: int, offset: int) -> int:
+        if not 0 <= offset < self.segment_words:
+            raise ValueError(f"offset {offset} outside segment")
+        return kernel * self.segment_words + offset
+
+    # -- host <-> device views ---------------------------------------------
+
+    def _sharding(self):
+        return NamedSharding(self.ctx.mesh, P(self.ctx.axes))
+
+    def make_global_state(self, init: np.ndarray | None = None):
+        """Build the sharded PgasState for all kernels.
+
+        Returns a PgasState whose leaves are global arrays with leading
+        dim = num_kernels, sharded one-kernel-per-device; inside
+        ``ctx.spmd`` each kernel sees its own (segment_words,) slice.
+        """
+        n = self.ctx.num_kernels
+        proto = PgasState.make(self.segment_words, self.dtype)
+
+        def globalize(leaf):
+            arr = np.broadcast_to(np.asarray(leaf)[None], (n,) + leaf.shape).copy()
+            return arr
+
+        leaves = jax.tree.map(globalize, proto)
+        if init is not None:
+            if init.size != self.total_words:
+                raise ValueError(
+                    f"init has {init.size} words, address space has {self.total_words}")
+            leaves = PgasState(
+                segment=init.reshape(n, self.segment_words).astype(self.dtype),
+                credits=leaves.credits, barrier_epoch=leaves.barrier_epoch,
+                rx_words=leaves.rx_words, tx_words=leaves.tx_words,
+                error=leaves.error)
+        shd = self._sharding()
+
+        def put(leaf):
+            spec = P(self.ctx.axes) if leaf.ndim >= 1 else P(self.ctx.axes)
+            # every leaf gained a leading kernel dim
+            return jax.device_put(leaf, NamedSharding(self.ctx.mesh, P(self.ctx.axes)))
+
+        return jax.tree.map(put, leaves)
+
+    def read_global(self, state: PgasState) -> np.ndarray:
+        """Gather the whole address space back to the host (all segments,
+        kernel order)."""
+        return np.asarray(jax.device_get(state.segment)).reshape(-1)
+
+    def spmd(self, fn, **kw):
+        """shard_map wrapper: ``fn(state) -> state`` written per-kernel;
+        the global view gives every PgasState leaf a leading kernel dim
+        split over the kernel axes, removed inside."""
+        spec = P(self.ctx.axes)
+
+        def inner(state):
+            state = jax.tree.map(lambda x: x[0], state)  # drop kernel dim
+            out = fn(state)
+            return jax.tree.map(lambda x: x[None], out)
+
+        return jax.shard_map(inner, mesh=self.ctx.mesh, in_specs=spec,
+                             out_specs=spec, **kw)

@@ -1,0 +1,129 @@
+"""Active Message wire format (paper Sec. III-A).
+
+Every Shoal message is ``header ++ payload``.  The header is a fixed
+12-word int32 vector so it can travel through the same typed stream as
+the payload (the GAScore parses it with dynamic slices, exactly like the
+hardware IP parses the AXIS stream).  An all-zero header is an explicit
+NOP: kernels that do not participate in a collectivized AM call receive
+zeros from ``ppermute`` and must take no action and send no reply.
+
+Word layout::
+
+    0  type      class (NOP/SHORT/MEDIUM/LONG) | flag bits
+    1  src       source kernel ID
+    2  dst       destination kernel ID
+    3  nwords    payload length in words
+    4  dst_addr  destination segment word offset (Long), handler arg0 (Short)
+    5  src_addr  source segment word offset (get / memory-sourced put)
+    6  handler   handler-table index
+    7  token     reply/credit counter index
+    8  stride    words between strided blocks
+    9  blk_words words per strided block
+    10 nblocks   number of strided blocks
+    11 seq       segment sequence number (k of n) for >MTU segmentation
+
+The class/flag split mirrors the paper: three AM classes, each with
+put/get direction, FIFO vs memory payload source, optional strided /
+vectored addressing, and an async flag that suppresses the auto-reply.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+HDR_WORDS = 12
+
+# -- message classes (word 0, low 3 bits) ------------------------------------
+NOP = 0
+SHORT = 1
+MEDIUM = 2
+LONG = 3
+_CLASS_MASK = 0x7
+
+# -- flags (word 0, high bits) ------------------------------------------------
+FLAG_ASYNC = 1 << 3      # no auto-reply (UDP-like; paper Sec. III-A)
+FLAG_GET = 1 << 4        # get request (data flows dst -> src)
+FLAG_FIFO = 1 << 5       # payload from kernel, not from shared memory
+FLAG_STRIDED = 1 << 6    # strided Long
+FLAG_VECTORED = 1 << 7   # vectored Long
+FLAG_REPLY = 1 << 8      # this message is an auto-generated reply
+
+FIELDS = (
+    "type", "src", "dst", "nwords", "dst_addr", "src_addr",
+    "handler", "token", "stride", "blk_words", "nblocks", "seq",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Header:
+    """Decoded header; every field is a (traced or concrete) int32 scalar."""
+
+    type: jnp.ndarray
+    src: jnp.ndarray
+    dst: jnp.ndarray
+    nwords: jnp.ndarray
+    dst_addr: jnp.ndarray
+    src_addr: jnp.ndarray
+    handler: jnp.ndarray
+    token: jnp.ndarray
+    stride: jnp.ndarray
+    blk_words: jnp.ndarray
+    nblocks: jnp.ndarray
+    seq: jnp.ndarray
+
+    @property
+    def msg_class(self):
+        return self.type & _CLASS_MASK
+
+    def flag(self, bit: int):
+        return (self.type & bit) != 0
+
+
+def make_type(msg_class: int, *, asynchronous=False, get=False, fifo=False,
+              strided=False, vectored=False, reply=False) -> int:
+    t = msg_class & _CLASS_MASK
+    if asynchronous:
+        t |= FLAG_ASYNC
+    if get:
+        t |= FLAG_GET
+    if fifo:
+        t |= FLAG_FIFO
+    if strided:
+        t |= FLAG_STRIDED
+    if vectored:
+        t |= FLAG_VECTORED
+    if reply:
+        t |= FLAG_REPLY
+    return t
+
+
+def encode(**fields) -> jnp.ndarray:
+    """Build a 12-word int32 header. Unspecified fields are zero."""
+    unknown = set(fields) - set(FIELDS)
+    if unknown:
+        raise ValueError(f"unknown header fields: {unknown}")
+    vals = [jnp.asarray(fields.get(f, 0), jnp.int32) for f in FIELDS]
+    return jnp.stack(vals)
+
+
+def decode(hdr: jnp.ndarray) -> Header:
+    if hdr.shape != (HDR_WORDS,):
+        raise ValueError(f"header must be ({HDR_WORDS},), got {hdr.shape}")
+    return Header(*(hdr[i] for i in range(HDR_WORDS)))
+
+
+def reply_for(hdr: Header) -> jnp.ndarray:
+    """The automatic reply: a Short AM back to the source that bumps the
+    source's credit counter for ``token`` (paper Sec. III-A: "Reply
+    messages are Short messages that trigger a handler function that
+    increments a variable")."""
+    return encode(
+        type=make_type(SHORT, asynchronous=True, reply=True),
+        src=hdr.dst, dst=hdr.src, token=hdr.token,
+    )
+
+
+def is_nop(hdr: Header):
+    return hdr.msg_class == NOP

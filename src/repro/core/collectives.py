@@ -1,0 +1,139 @@
+"""Collectives built from one-sided Shoal puts.
+
+The paper positions AMs as the substrate on which higher communication
+patterns are built (GASNet heritage: UPC/Chapel collectives sit on AM
+puts/gets).  These ring algorithms are the specialization of
+``put_long(handler=H_ADD)`` FIFO-variant AMs to a neighbor ring: each
+step is one one-sided link traversal carrying a payload that is combined
+at the receiver — exactly the GAScore's Long-with-accumulate datapath,
+with the header machinery constant-folded away (every step's route,
+size, and handler are trace-time constants, so the header words would be
+dead code; the Table-I analogue in the benchmarks accounts for them
+explicitly instead).
+
+These are the ``comm_backend="shoal"`` primitives of the trainer.  The
+``xla`` backend uses ``lax.psum``/``psum_scatter``/``all_gather`` and
+lets the compiler fuse and overlap — that pair (modular AM engine vs
+fused schedule) reproduces, at pod scale, the paper's own observation
+that the GAScore's modularity costs latency vs a tightly integrated
+datapath (Sec. IV-B1).
+
+All functions run inside ``shard_map`` over ``axes``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def _ring_perm(n: int) -> list[tuple[int, int]]:
+    return [(i, (i + 1) % n) for i in range(n)]
+
+
+def _pad_to_chunks(x: jnp.ndarray, n: int):
+    flat = x.reshape(-1)
+    chunk = -(-flat.size // n)
+    pad = chunk * n - flat.size
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(n, chunk), pad
+
+
+def ring_reduce_scatter(x: jnp.ndarray, axes, n: int) -> jnp.ndarray:
+    """Ring reduce-scatter of a replicated-shape per-kernel value.
+
+    ``x`` is this kernel's full-size addend; returns this kernel's
+    reduced chunk (flattened, chunk = ceil(size/n)).  n-1 steps, each a
+    one-sided neighbor put with the H_ADD handler.
+    """
+    if n == 1:
+        return x.reshape(-1)
+    buf, _ = _pad_to_chunks(x, n)
+    me = lax.axis_index(axes)
+    perm = _ring_perm(n)
+
+    def step(t, buf):
+        # send the chunk we have been accumulating, receive our neighbor's.
+        # The -1 phase shift makes rank i end up owning chunk i.
+        send_idx = jnp.mod(me - t - 1, n)
+        send = lax.dynamic_slice(buf, (send_idx, 0), (1, buf.shape[1]))
+        recv = lax.ppermute(send, axes, perm)
+        recv_idx = jnp.mod(me - t - 2, n)
+        cur = lax.dynamic_slice(buf, (recv_idx, 0), (1, buf.shape[1]))
+        return lax.dynamic_update_slice(buf, cur + recv, (recv_idx, 0))
+
+    buf = lax.fori_loop(0, n - 1, step, buf)
+    return lax.dynamic_slice(buf, (me, 0), (1, buf.shape[1]))[0]
+
+
+def ring_all_gather(chunk: jnp.ndarray, axes, n: int) -> jnp.ndarray:
+    """Ring all-gather: every kernel contributes ``chunk``; returns the
+    (n, chunk) stack in kernel order.  n-1 one-sided neighbor puts."""
+    chunk = chunk.reshape(-1)
+    if n == 1:
+        return chunk[None]
+    me = lax.axis_index(axes)
+    buf = jnp.zeros((n, chunk.size), chunk.dtype)
+    buf = lax.dynamic_update_slice(buf, chunk[None], (me, 0))
+    perm = _ring_perm(n)
+
+    def step(t, buf):
+        send_idx = jnp.mod(me - t, n)
+        send = lax.dynamic_slice(buf, (send_idx, 0), (1, buf.shape[1]))
+        recv = lax.ppermute(send, axes, perm)
+        recv_idx = jnp.mod(me - t - 1, n)
+        return lax.dynamic_update_slice(buf, recv, (recv_idx, 0))
+
+    return lax.fori_loop(0, n - 1, step, buf)
+
+
+def ring_all_reduce(x: jnp.ndarray, axes, n: int) -> jnp.ndarray:
+    """Ring all-reduce = reduce-scatter + all-gather (2(n-1) puts, each
+    of size/n words: bandwidth-optimal, the schedule every production
+    collective library uses on a torus)."""
+    if n == 1:
+        return x
+    shape, size = x.shape, x.size
+    chunk = ring_reduce_scatter(x, axes, n)
+    full = ring_all_gather(chunk, axes, n).reshape(-1)
+    return full[:size].reshape(shape)
+
+
+def all_to_all_vectored(x: jnp.ndarray, axes, n: int, *, tiled=True) -> jnp.ndarray:
+    """Vectored-AM all-to-all: kernel i's block j lands at kernel j slot i.
+
+    This is the Shoal Vectored Long put pattern over all kernel pairs —
+    lowered directly to the ICI all-to-all (the hardware does the
+    scatter, as the GAScore's DataMover does in the paper).  ``x`` has
+    leading dim n (one block per destination).
+    """
+    return lax.all_to_all(x, axes, split_axis=0, concat_axis=0, tiled=tiled)
+
+
+def tree_barrier(axes) -> jnp.ndarray:
+    """psum of a unit scalar: the dataflow barrier (see ops.barrier)."""
+    return lax.psum(jnp.ones((), jnp.int32), axes)
+
+
+def broadcast_from(x: jnp.ndarray, axes, n: int, root: int = 0) -> jnp.ndarray:
+    """One-to-all: ring pipeline of n-1 one-sided puts from ``root``."""
+    if n == 1:
+        return x
+    me = lax.axis_index(axes)
+    buf = jnp.where(me == root, x, jnp.zeros_like(x))
+    perm = _ring_perm(n)
+    # payloads may legitimately contain zeros; a validity flag travels too
+    flag = jnp.where(me == root, jnp.ones((), x.dtype), jnp.zeros((), x.dtype))
+
+    def step2(_, carry):
+        buf, flag = carry
+        rb = lax.ppermute(buf, axes, perm)
+        rf = lax.ppermute(flag, axes, perm)
+        take = (rf > 0) & (flag == 0)
+        buf = jnp.where(take, rb, buf)
+        flag = jnp.maximum(flag, rf)
+        return buf, flag
+
+    buf, _ = lax.fori_loop(0, n - 1, step2, (buf, flag))
+    return buf

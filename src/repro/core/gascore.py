@@ -1,0 +1,197 @@
+"""The GAScore: per-kernel AM engine (paper Sec. III-C, Fig. 3).
+
+The hardware GAScore is a DMA engine shared by all kernels on an FPGA:
+``xpams_tx``/``am_tx`` build outgoing packets (reading memory-sourced
+payloads through the AXI DataMover), ``am_rx``/``xpams_rx`` parse
+incoming packets, write Long payloads to memory, hand Medium payloads to
+kernels, run handlers, and emit the automatic reply.
+
+Here each stage is a pure function over ``(header, payload, state)``.
+The correspondence:
+
+    am_tx / DataMover read   -> :func:`egress`   (dynamic_slice from segment)
+    am_rx / DataMover write  -> :func:`ingress_long` (dynamic_update_slice)
+    xpams_rx handler+reply   -> :func:`ingress_*` + :func:`auto_reply`
+    hold_buffer              -> dataflow ordering (a reply is data-dependent
+                                on the segment write, so it cannot overtake it)
+
+One deliberate refinement over the paper: the paper's GAScore is a
+monolith that must decode every message class on every packet, and its
+*future work* section proposes a modular API where only the datapaths an
+application uses are instantiated.  We implement that refinement: each
+``ingress_*`` below compiles only its own datapath, and an op call site
+only lowers the stages it needs.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import am
+from repro.core import handlers as hd
+from repro.core.state import PgasState, ShoalContext
+
+
+def _lane_mask(nwords, width: int, dtype=jnp.bool_):
+    """mask[i] = i < nwords   (valid payload lanes in a fixed-size buffer)."""
+    return (lax.iota(jnp.int32, width) < nwords).astype(dtype)
+
+
+def egress(ctx: ShoalContext, state: PgasState, hdr: am.Header,
+           fifo_payload: jnp.ndarray | None, packet_words: int):
+    """Build the outgoing payload buffer (am_tx + DataMover read path).
+
+    FIFO-variant AMs (paper Sec. III-A) carry payload straight from the
+    kernel; memory-variant AMs read ``nwords`` at ``src_addr`` from the
+    local segment.  Returns a (packet_words,) buffer.
+    """
+    if fifo_payload is not None:
+        pay = fifo_payload.astype(state.segment.dtype)
+        if pay.shape != (packet_words,):
+            pay = jnp.pad(pay.reshape(-1), (0, packet_words - pay.size))
+    else:
+        addr = jnp.clip(hdr.src_addr, 0, ctx.segment_words - packet_words)
+        pay = lax.dynamic_slice(state.segment, (addr,), (packet_words,))
+    mask = _lane_mask(hdr.nwords, packet_words, pay.dtype)
+    return pay * mask
+
+
+def ingress_long(ctx: ShoalContext, state: PgasState, hdr: am.Header,
+                 payload: jnp.ndarray, packet_words: int) -> PgasState:
+    """Long-put ingress: payload -> shared memory via handler (am_rx path).
+
+    The handler (write/add/max/min/custom) is applied to the destination
+    region, so a Long put with H_ADD is a one-sided remote accumulate.
+    Non-participating kernels see a NOP header and leave their segment
+    bit-identical.
+    """
+    active = hdr.msg_class == am.LONG
+    addr = jnp.clip(hdr.dst_addr, 0, ctx.segment_words - packet_words)
+    region = lax.dynamic_slice(state.segment, (addr,), (packet_words,))
+    new_region = ctx.handlers.dispatch(hdr.handler, region, payload)
+    lanes = _lane_mask(hdr.nwords, packet_words)
+    new_region = jnp.where(lanes & active, new_region, region)
+    segment = lax.dynamic_update_slice(state.segment, new_region, (addr,))
+    state = PgasState(
+        segment=segment,
+        credits=state.credits,
+        barrier_epoch=state.barrier_epoch,
+        rx_words=state.rx_words + jnp.where(active, hdr.nwords, 0),
+        tx_words=state.tx_words,
+        error=state.error,
+    )
+    return state
+
+
+def ingress_strided(ctx: ShoalContext, state: PgasState, hdr: am.Header,
+                    payload: jnp.ndarray, blk_words: int, nblocks: int) -> PgasState:
+    """Strided Long-put ingress: scatter ``nblocks`` blocks of
+    ``blk_words`` to ``dst_addr + i*stride`` (paper carries strided AMs
+    forward from THeGASNet).  Block geometry is static (trace-time);
+    the stride itself may be traced."""
+    active = hdr.msg_class == am.LONG
+
+    def body(i, seg):
+        blk = lax.dynamic_slice(payload, (i * blk_words,), (blk_words,))
+        addr = jnp.clip(hdr.dst_addr + i * hdr.stride, 0,
+                        ctx.segment_words - blk_words)
+        region = lax.dynamic_slice(seg, (addr,), (blk_words,))
+        new = ctx.handlers.dispatch(hdr.handler, region, blk)
+        new = jnp.where(active, new, region)
+        return lax.dynamic_update_slice(seg, new, (addr,))
+
+    segment = lax.fori_loop(0, nblocks, body, state.segment)
+    return dataclasses_replace(state, segment=segment,
+                               rx_words=state.rx_words + jnp.where(active, hdr.nwords, 0))
+
+
+def ingress_medium(state: PgasState, hdr: am.Header, payload: jnp.ndarray,
+                   packet_words: int):
+    """Medium-put ingress: deliver payload to the kernel (xpams_rx "To
+    Kernels" path).  Returns (state, delivered) where ``delivered`` is
+    zero-masked on non-participating kernels."""
+    active = hdr.msg_class == am.MEDIUM
+    lanes = _lane_mask(hdr.nwords, packet_words, payload.dtype)
+    delivered = payload * lanes * active.astype(payload.dtype)
+    state = dataclasses_replace(
+        state, rx_words=state.rx_words + jnp.where(active, hdr.nwords, 0))
+    return state, delivered
+
+
+def ingress_short(ctx: ShoalContext, state: PgasState, hdr: am.Header) -> PgasState:
+    """Short ingress: signaling.  The handler runs on a one-word region of
+    the credit file at ``token`` with ``dst_addr`` as its argument, so
+    H_ADD implements counting semaphores (the paper's primary Short use).
+    Reply messages (FLAG_REPLY) bump the credit counter directly: reply
+    management is absorbed into the runtime (paper Sec. III-A)."""
+    is_short = hdr.msg_class == am.SHORT
+    is_reply = is_short & hdr.flag(am.FLAG_REPLY)
+    is_user = is_short & ~hdr.flag(am.FLAG_REPLY)
+
+    token = jnp.clip(hdr.token, 0, hd.NUM_TOKENS - 1)
+    # replies: credits[token] += 1
+    credits = state.credits.at[token].add(is_reply.astype(jnp.int32))
+    # user shorts: handler over credits[token] with arg payload [dst_addr]
+    region = lax.dynamic_slice(credits, (token,), (1,))
+    arg = hdr.dst_addr.astype(credits.dtype).reshape(1)
+    new_region = ctx.handlers.dispatch(hdr.handler, region, arg)
+    new_region = jnp.where(is_user, new_region, region)
+    credits = lax.dynamic_update_slice(credits, new_region, (token,))
+    return dataclasses_replace(state, credits=credits)
+
+
+def serve_get(ctx: ShoalContext, state: PgasState, hdr: am.Header,
+              packet_words: int):
+    """Get-request service: read ``nwords`` at ``src_addr`` from the local
+    segment and return (data_header, data_payload) to ship back.  The
+    response is marked as a reply so the requester's credit bumps on
+    receipt — for gets, the data return *is* the reply."""
+    is_get = hdr.flag(am.FLAG_GET)
+    addr = jnp.clip(hdr.src_addr, 0, ctx.segment_words - packet_words)
+    data = lax.dynamic_slice(state.segment, (addr,), (packet_words,))
+    data = data * _lane_mask(hdr.nwords, packet_words, data.dtype)
+    data = data * is_get.astype(data.dtype)
+    # Response header is NOP unless this really was a get request, so
+    # non-participating kernels ship nothing back.
+    resp_type = jnp.where(
+        is_get,
+        hdr.msg_class | am.FLAG_REPLY | am.FLAG_ASYNC,
+        jnp.zeros((), jnp.int32),
+    ).astype(jnp.int32)
+    resp_hdr = am.encode(
+        type=0, src=hdr.dst, dst=hdr.src, nwords=hdr.nwords,
+        dst_addr=hdr.dst_addr, token=hdr.token,
+        handler=hdr.handler,
+    ).at[0].set(resp_type)
+    resp_hdr = jnp.where(is_get, resp_hdr, jnp.zeros_like(resp_hdr))
+    state = dataclasses_replace(
+        state, tx_words=state.tx_words + jnp.where(is_get, hdr.nwords, 0))
+    return state, resp_hdr, data
+
+
+def auto_reply(hdr: am.Header) -> jnp.ndarray:
+    """Build the automatic reply header for an acked AM; NOP (all-zero)
+    when the message was asynchronous, a NOP, or itself a reply."""
+    rep = am.reply_for(hdr)
+    suppress = (hdr.msg_class == am.NOP) | hdr.flag(am.FLAG_ASYNC) | hdr.flag(am.FLAG_REPLY)
+    return jnp.where(suppress, jnp.zeros_like(rep), rep)
+
+
+def ingress_reply(state: PgasState, hdr: am.Header) -> PgasState:
+    """Reply ingress at the original sender: bump credits[token]."""
+    is_reply = hdr.flag(am.FLAG_REPLY)
+    token = jnp.clip(hdr.token, 0, hd.NUM_TOKENS - 1)
+    credits = state.credits.at[token].add(is_reply.astype(jnp.int32))
+    return dataclasses_replace(state, credits=credits)
+
+
+def dataclasses_replace(state: PgasState, **kw) -> PgasState:
+    """dataclasses.replace for the registered-dataclass pytree."""
+    fields = dict(
+        segment=state.segment, credits=state.credits,
+        barrier_epoch=state.barrier_epoch, rx_words=state.rx_words,
+        tx_words=state.tx_words, error=state.error,
+    )
+    fields.update(kw)
+    return PgasState(**fields)

@@ -1,0 +1,83 @@
+"""HUMboldt: the two-sided baseline (paper Sec. II-C3).
+
+HUMboldt is the MPI-like protocol previously built on Galapagos that the
+paper contrasts with Shoal's one-sided AMs.  Its exchange is a 4-phase
+rendezvous:
+
+    1. sender  -> receiver : request
+    2. receiver -> sender  : clear-to-send (ack)
+    3. sender  -> receiver : data
+    4. receiver -> sender  : completion
+
+i.e. four link traversals (two round trips) where an async Shoal put
+needs one and an acked put two.  We reproduce it so the microbenchmarks
+can measure the one-sided advantage the PGAS model buys — the paper's
+central performance argument (Secs. II-A3, II-C3).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import am
+from repro.core import gascore as gc
+from repro.core import ops
+from repro.core.state import PgasState, ShoalContext
+
+
+def sendrecv(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray,
+             pattern: ops.Pattern, *, token: int = 0):
+    """HUM_Send/HUM_Recv pair, collectivized: kernels on the source side
+    of ``pattern`` send ``payload``; destination kernels receive it.
+
+    Returns ``(state, received)``.  Costs 4 link traversals per packet
+    (vs 1-2 for a Shoal put): measured head-to-head in
+    ``benchmarks/bench_latency.py``.
+    """
+    nwords = int(payload.size)
+    limit = ctx.transport.max_packet_words
+    rev = [(d, s) for (s, d) in pattern]
+    parts = []
+    for off, w in ops._segments(nwords, limit):
+        # 1. request (header-only, async: the protocol's own acks follow)
+        hdr = am.encode(
+            type=am.make_type(am.SHORT, asynchronous=True),
+            src=ctx.my_id(), dst=ops._dst_of(ctx, pattern), nwords=w,
+            token=token, seq=off)
+        hdr = ops._mask_nonparticipants(ctx, pattern, hdr)
+        req, _ = ops._exchange(ctx, pattern, hdr, None)
+        # 2. clear-to-send back to the sender
+        req_h = am.decode(req)
+        cts = am.encode(
+            type=am.make_type(am.SHORT, asynchronous=True),
+            src=req_h.dst, dst=req_h.src, nwords=req_h.nwords, token=token)
+        cts = jnp.where(req_h.msg_class == am.SHORT, cts, jnp.zeros_like(cts))
+        cts_back, _ = ops._exchange(ctx, rev, cts, None)
+        # 3. data (sender may proceed only once cleared: data dependence
+        #    on the CTS header enforces the ordering the threads had)
+        cleared = am.decode(cts_back).msg_class == am.SHORT
+        chunk = payload.reshape(-1)[off:off + w]
+        data_hdr = am.encode(
+            type=am.make_type(am.MEDIUM, asynchronous=True, fifo=True),
+            src=ctx.my_id(), dst=ops._dst_of(ctx, pattern), nwords=w,
+            token=token, seq=off)
+        data_hdr = jnp.where(cleared, data_hdr, jnp.zeros_like(data_hdr))
+        data_hdr = ops._mask_nonparticipants(ctx, pattern, data_hdr)
+        buf = chunk * cleared.astype(chunk.dtype)
+        dh, dp = ops._exchange(ctx, pattern, data_hdr, buf)
+        dhh = am.decode(dh)
+        state, part = gc.ingress_medium(state, dhh, dp, w)
+        # 4. completion back to the sender (bumps the sender's credits,
+        #    so wait_replies works identically across both libraries)
+        comp = am.encode(
+            type=am.make_type(am.SHORT, asynchronous=True, reply=True),
+            src=dhh.dst, dst=dhh.src, token=token)
+        comp = jnp.where(dhh.msg_class == am.MEDIUM, comp, jnp.zeros_like(comp))
+        comp_back, _ = ops._exchange(ctx, rev, comp, None)
+        state = gc.ingress_reply(state, am.decode(comp_back))
+        parts.append(part)
+    received = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+    return state, received
+
+
+HOPS_PER_MESSAGE = 4  # for the analytic latency model

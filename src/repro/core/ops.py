@@ -1,0 +1,356 @@
+"""The Shoal communication API (paper Sec. III-A).
+
+Every function here is the SPMD-collectivized form of a Shoal AM call:
+all kernels execute the same line; ``pattern`` is a static list of
+``(src_kernel, dst_kernel)`` pairs naming who actually communicates this
+call, and kernels outside the pattern contribute NOP headers (no action,
+no reply).  This is the dataflow adaptation of one-sided messaging: a
+put is ONE link traversal (plus an optional auto-reply), with no
+rendezvous — contrast :mod:`repro.core.humboldt`, the two-sided baseline,
+which costs four.
+
+All ops must run inside ``shard_map`` over ``ctx.axes`` (use
+``ctx.spmd``).  They thread :class:`PgasState` functionally.
+
+Message-size segmentation: AMs whose payload exceeds the transport's
+``max_packet_words`` are transparently split into sequence-numbered
+packets.  The paper hits this limit (9000-byte jumbo frames) in the
+Jacobi application and leaves segmentation as future work (footnote 2);
+we implement it.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import am
+from repro.core import gascore as gc
+from repro.core import handlers as hd
+from repro.core.state import ERR_WAIT_UNDERFLOW, PgasState, ShoalContext
+
+Pattern = list[tuple[int, int]]
+
+
+# --------------------------------------------------------------------------
+# pattern plumbing
+# --------------------------------------------------------------------------
+
+def _reverse(pattern: Pattern) -> Pattern:
+    return [(d, s) for (s, d) in pattern]
+
+
+def _is_sender(ctx: ShoalContext, pattern: Pattern):
+    me = ctx.my_id()
+    srcs = jnp.asarray([s for s, _ in pattern] or [-1], jnp.int32)
+    return jnp.any(me == srcs)
+
+
+def _dst_of(ctx: ShoalContext, pattern: Pattern):
+    """Per-kernel destination (or -1): a trace-time table lookup."""
+    table = -jnp.ones((ctx.num_kernels,), jnp.int32)
+    for s, d in pattern:
+        table = table.at[s].set(d)
+    return table[ctx.my_id()]
+
+
+def _exchange(ctx: ShoalContext, pattern: Pattern, hdr: jnp.ndarray,
+              payload: jnp.ndarray | None):
+    """One link traversal: ship (header, payload) along ``pattern``.
+
+    Pure-local patterns (src == dst for every pair) short-circuit: no
+    collective is issued, mirroring libGalapagos' internal routing for
+    same-node kernels.
+    """
+    remote = [(s, d) for (s, d) in pattern if s != d]
+    if not remote:
+        return hdr, payload
+    hdr_r = lax.ppermute(hdr, ctx.axes, pattern)
+    pay_r = None if payload is None else lax.ppermute(payload, ctx.axes, pattern)
+    return hdr_r, pay_r
+
+
+def _mask_nonparticipants(ctx: ShoalContext, pattern: Pattern, hdr: jnp.ndarray):
+    return jnp.where(_is_sender(ctx, pattern), hdr, jnp.zeros_like(hdr))
+
+
+def _deliver_reply(ctx: ShoalContext, state: PgasState, pattern: Pattern,
+                   hdr_at_dst: am.Header) -> PgasState:
+    """Ship the auto-reply back along the reversed pattern and absorb it."""
+    if not ctx.transport.acked:
+        return state
+    rep = gc.auto_reply(hdr_at_dst)
+    rep_back, _ = _exchange(ctx, _reverse(pattern), rep, None)
+    return gc.ingress_reply(state, am.decode(rep_back))
+
+
+def _segments(nwords: int, limit: int):
+    """Static segmentation plan: [(offset, words), ...]."""
+    if nwords <= limit:
+        return [(0, nwords)]
+    out, off = [], 0
+    while off < nwords:
+        w = min(limit, nwords - off)
+        out.append((off, w))
+        off += w
+    return out
+
+
+# --------------------------------------------------------------------------
+# Short AMs
+# --------------------------------------------------------------------------
+
+def put_short(ctx: ShoalContext, state: PgasState, pattern: Pattern, *,
+              handler=hd.H_ADD, arg=1, token=0,
+              asynchronous: bool = False) -> PgasState:
+    """Short AM: signal the destination (no payload).
+
+    The handler runs on the destination's credit word ``token`` with
+    ``arg``; the default (H_ADD, 1) is a counting semaphore.
+    """
+    t = am.make_type(am.SHORT, asynchronous=asynchronous)
+    hdr = am.encode(type=t, src=ctx.my_id(), dst=_dst_of(ctx, pattern),
+                    handler=handler, token=token, dst_addr=arg)
+    hdr = _mask_nonparticipants(ctx, pattern, hdr)
+    hdr_r, _ = _exchange(ctx, pattern, hdr, None)
+    h = am.decode(hdr_r)
+    state = gc.ingress_short(ctx, state, h)
+    return _deliver_reply(ctx, state, pattern, h)
+
+
+# --------------------------------------------------------------------------
+# Medium AMs (payload -> destination kernel)
+# --------------------------------------------------------------------------
+
+def put_medium(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray | None,
+               pattern: Pattern, *, handler=hd.H_NOP, token=0,
+               asynchronous: bool = False, from_segment_addr=None,
+               nwords: int | None = None):
+    """Medium AM: point-to-point payload straight to the destination
+    kernel (returned value).  ``from_segment_addr`` selects the
+    memory-sourced variant (payload read from the local segment by the
+    GAScore at that address, ``nwords`` long, i.e. the non-FIFO case);
+    default is the FIFO variant with ``payload`` from the kernel.
+
+    Returns ``(state, delivered)``; ``delivered`` is zeros on kernels
+    that receive nothing this call.
+    """
+    if payload is not None:
+        nwords = int(payload.size)
+    assert nwords is not None
+    limit = ctx.transport.max_packet_words
+    fifo = from_segment_addr is None
+    out_parts = []
+    for off, w in _segments(nwords, limit):
+        t = am.make_type(am.MEDIUM, asynchronous=asynchronous, fifo=fifo)
+        src_addr = 0 if fifo else from_segment_addr + off
+        hdr = am.encode(type=t, src=ctx.my_id(), dst=_dst_of(ctx, pattern),
+                        nwords=w, handler=handler, token=token,
+                        src_addr=src_addr, seq=off)
+        hdr = _mask_nonparticipants(ctx, pattern, hdr)
+        chunk = payload.reshape(-1)[off:off + w] if fifo else None
+        buf = gc.egress(ctx, state, am.decode(hdr), chunk, w)
+        state = gc.dataclasses_replace(
+            state, tx_words=state.tx_words +
+            jnp.where(_is_sender(ctx, pattern), w, 0))
+        hdr_r, pay_r = _exchange(ctx, pattern, hdr, buf)
+        h = am.decode(hdr_r)
+        state, part = gc.ingress_medium(state, h, pay_r, w)
+        state = _deliver_reply(ctx, state, pattern, h)
+        out_parts.append(part)
+    delivered = jnp.concatenate(out_parts) if len(out_parts) > 1 else out_parts[0]
+    return state, delivered
+
+
+# --------------------------------------------------------------------------
+# Long AMs (payload -> destination shared memory)
+# --------------------------------------------------------------------------
+
+def put_long(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray | None,
+             pattern: Pattern, dst_addr, *, handler=hd.H_WRITE, token=0,
+             asynchronous: bool = False, from_segment_addr=None,
+             nwords: int | None = None) -> PgasState:
+    """Long AM: one-sided put into the destination kernel's segment at
+    ``dst_addr``, applied through ``handler`` (H_WRITE = plain put,
+    H_ADD = remote accumulate, ...).  FIFO variant when ``payload`` is
+    given; memory-sourced variant when ``from_segment_addr`` is.
+    """
+    if payload is not None:
+        nwords = int(payload.size)
+    assert nwords is not None
+    limit = ctx.transport.max_packet_words
+    for off, w in _segments(nwords, limit):
+        fifo = from_segment_addr is None
+        t = am.make_type(am.LONG, asynchronous=asynchronous, fifo=fifo)
+        src_addr = 0 if fifo else from_segment_addr + off
+        hdr = am.encode(type=t, src=ctx.my_id(), dst=_dst_of(ctx, pattern),
+                        nwords=w, dst_addr=dst_addr + off, src_addr=src_addr,
+                        handler=handler, token=token, seq=off)
+        hdr = _mask_nonparticipants(ctx, pattern, hdr)
+        chunk = payload.reshape(-1)[off:off + w] if fifo else None
+        buf = gc.egress(ctx, state, am.decode(hdr), chunk, w)
+        state = gc.dataclasses_replace(
+            state, tx_words=state.tx_words +
+            jnp.where(_is_sender(ctx, pattern), w, 0))
+        hdr_r, pay_r = _exchange(ctx, pattern, hdr, buf)
+        h = am.decode(hdr_r)
+        state = gc.ingress_long(ctx, state, h, pay_r, w)
+        state = _deliver_reply(ctx, state, pattern, h)
+    return state
+
+
+def put_long_strided(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray,
+                     pattern: Pattern, dst_addr, stride, *,
+                     blk_words: int, nblocks: int, handler=hd.H_WRITE,
+                     token=0, asynchronous: bool = False) -> PgasState:
+    """Strided Long put: ``nblocks`` blocks of ``blk_words`` land at
+    ``dst_addr + i*stride`` (THeGASNet's strided access, carried forward
+    by the paper).  ``payload`` is the packed (nblocks*blk_words,)
+    buffer — see :mod:`repro.kernels.am_pack` for the packing hot path.
+    Block geometry is static; stride may be traced.
+    """
+    nwords = blk_words * nblocks
+    if nwords > ctx.transport.max_packet_words:
+        # segment at block granularity
+        per = max(1, ctx.transport.max_packet_words // blk_words)
+        for b0 in range(0, nblocks, per):
+            nb = min(per, nblocks - b0)
+            sub = payload[b0 * blk_words:(b0 + nb) * blk_words]
+            state = put_long_strided(
+                ctx, state, sub, pattern, dst_addr + b0 * stride, stride,
+                blk_words=blk_words, nblocks=nb, handler=handler,
+                token=token, asynchronous=asynchronous)
+        return state
+    t = am.make_type(am.LONG, asynchronous=asynchronous, fifo=True, strided=True)
+    hdr = am.encode(type=t, src=ctx.my_id(), dst=_dst_of(ctx, pattern),
+                    nwords=nwords, dst_addr=dst_addr, handler=handler,
+                    token=token, stride=stride, blk_words=blk_words,
+                    nblocks=nblocks)
+    hdr = _mask_nonparticipants(ctx, pattern, hdr)
+    buf = gc.egress(ctx, state, am.decode(hdr), payload, nwords)
+    state = gc.dataclasses_replace(
+        state, tx_words=state.tx_words +
+        jnp.where(_is_sender(ctx, pattern), nwords, 0))
+    hdr_r, pay_r = _exchange(ctx, pattern, hdr, buf)
+    h = am.decode(hdr_r)
+    state = gc.ingress_strided(ctx, state, h, pay_r, blk_words, nblocks)
+    return _deliver_reply(ctx, state, pattern, h)
+
+
+def put_long_vectored(ctx: ShoalContext, state: PgasState,
+                      blocks: list[jnp.ndarray], pattern: Pattern,
+                      dst_addrs, *, handler=hd.H_WRITE, token=0,
+                      asynchronous: bool = False) -> PgasState:
+    """Vectored Long put: ``blocks[i]`` lands at ``dst_addrs[i]``.  One
+    AM on the wire (blocks concatenated); the receiver scatters.  Block
+    sizes are static; addresses may be traced."""
+    nwords = sum(int(b.size) for b in blocks)
+    payload = jnp.concatenate([b.reshape(-1) for b in blocks])
+    t = am.make_type(am.LONG, asynchronous=asynchronous, fifo=True, vectored=True)
+    hdr = am.encode(type=t, src=ctx.my_id(), dst=_dst_of(ctx, pattern),
+                    nwords=nwords, handler=handler, token=token,
+                    nblocks=len(blocks))
+    hdr = _mask_nonparticipants(ctx, pattern, hdr)
+    buf = gc.egress(ctx, state, am.decode(hdr), payload, nwords)
+    hdr_r, pay_r = _exchange(ctx, pattern, hdr, buf)
+    h = am.decode(hdr_r)
+    addrs_r = lax.ppermute(jnp.asarray(dst_addrs, jnp.int32), ctx.axes, pattern) \
+        if any(s != d for s, d in pattern) else jnp.asarray(dst_addrs, jnp.int32)
+    off = 0
+    for i, b in enumerate(blocks):
+        w = int(b.size)
+        sub_hdr = am.Header(
+            type=h.type, src=h.src, dst=h.dst, nwords=jnp.asarray(w, jnp.int32),
+            dst_addr=addrs_r[i], src_addr=h.src_addr, handler=h.handler,
+            token=h.token, stride=h.stride, blk_words=h.blk_words,
+            nblocks=h.nblocks, seq=h.seq)
+        state = gc.ingress_long(ctx, state, sub_hdr,
+                                lax.dynamic_slice(pay_r, (off,), (w,)), w)
+        off += w
+    return _deliver_reply(ctx, state, pattern, h)
+
+
+# --------------------------------------------------------------------------
+# Gets (one round trip: request header out, data back)
+# --------------------------------------------------------------------------
+
+def get_medium(ctx: ShoalContext, state: PgasState, pattern: Pattern,
+               src_addr, nwords: int, *, token=0):
+    """Medium get: fetch ``nwords`` at ``src_addr`` in the *destination*
+    kernel's segment, delivered to the requesting kernel.  Returns
+    ``(state, data)``.  The data return doubles as the reply (credits
+    bump on receipt)."""
+    limit = ctx.transport.max_packet_words
+    parts = []
+    for off, w in _segments(nwords, limit):
+        t = am.make_type(am.MEDIUM, get=True)
+        hdr = am.encode(type=t, src=ctx.my_id(), dst=_dst_of(ctx, pattern),
+                        nwords=w, src_addr=src_addr + off, token=token)
+        hdr = _mask_nonparticipants(ctx, pattern, hdr)
+        hdr_r, _ = _exchange(ctx, pattern, hdr, None)
+        state, resp_hdr, data = gc.serve_get(ctx, state, am.decode(hdr_r), w)
+        back_hdr, back_data = _exchange(ctx, _reverse(pattern), resp_hdr, data)
+        hb = am.decode(back_hdr)
+        state = gc.ingress_reply(state, hb)
+        state, part = gc.ingress_medium(state, hb, back_data, w)
+        parts.append(part)
+    data = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+    return state, data
+
+
+def get_long(ctx: ShoalContext, state: PgasState, pattern: Pattern,
+             src_addr, nwords: int, dst_addr, *, handler=hd.H_WRITE,
+             token=0) -> PgasState:
+    """Long get: fetch remote segment words into the *local* segment at
+    ``dst_addr`` (one-sided read)."""
+    limit = ctx.transport.max_packet_words
+    for off, w in _segments(nwords, limit):
+        t = am.make_type(am.LONG, get=True)
+        hdr = am.encode(type=t, src=ctx.my_id(), dst=_dst_of(ctx, pattern),
+                        nwords=w, src_addr=src_addr + off,
+                        dst_addr=dst_addr + off, token=token, handler=handler)
+        hdr = _mask_nonparticipants(ctx, pattern, hdr)
+        hdr_r, _ = _exchange(ctx, pattern, hdr, None)
+        state, resp_hdr, data = gc.serve_get(ctx, state, am.decode(hdr_r), w)
+        back_hdr, back_data = _exchange(ctx, _reverse(pattern), resp_hdr, data)
+        hb = am.decode(back_hdr)
+        state = gc.ingress_reply(state, hb)
+        # land in local segment through the handler (class LONG on the wire)
+        land = am.Header(
+            type=jnp.where(hb.flag(am.FLAG_REPLY), jnp.asarray(am.LONG), jnp.asarray(am.NOP)).astype(jnp.int32),
+            src=hb.src, dst=hb.dst, nwords=hb.nwords, dst_addr=hb.dst_addr,
+            src_addr=hb.src_addr, handler=hb.handler, token=hb.token,
+            stride=hb.stride, blk_words=hb.blk_words, nblocks=hb.nblocks,
+            seq=hb.seq)
+        state = gc.ingress_long(ctx, state, land, back_data, w)
+    return state
+
+
+# --------------------------------------------------------------------------
+# synchronization
+# --------------------------------------------------------------------------
+
+def barrier(ctx: ShoalContext, state: PgasState) -> PgasState:
+    """Global barrier over all kernels (paper Sec. III: "barriers for
+    synchronization").  A psum of a unit scalar is the dataflow barrier:
+    no kernel's successor ops can be scheduled before every kernel's
+    contribution arrives.  The barrier epoch counts completions."""
+    arrived = lax.psum(jnp.ones((), jnp.int32), ctx.axes)
+    epoch = state.barrier_epoch + (arrived // arrived)  # +1, data-dependent
+    return gc.dataclasses_replace(state, barrier_epoch=epoch)
+
+
+def wait_replies(ctx: ShoalContext, state: PgasState, token, n) -> PgasState:
+    """Wait for ``n`` replies on ``token`` then consume them.
+
+    In SPMD dataflow, arrival is guaranteed by data dependence, so this
+    is bookkeeping: it drains ``n`` credits and raises a sticky error
+    bit if fewer than ``n`` were present — the observable equivalent of
+    a hang in the threaded original (tests assert on it).
+    """
+    token = jnp.clip(jnp.asarray(token, jnp.int32), 0, hd.NUM_TOKENS - 1)
+    have = state.credits[token]
+    err = jnp.where(have < n, ERR_WAIT_UNDERFLOW, 0).astype(jnp.int32)
+    credits = hd.drain_credits(state.credits, token, n)
+    return gc.dataclasses_replace(state, credits=credits,
+                                  error=state.error | err)

@@ -1,0 +1,98 @@
+"""Per-kernel PGAS state and the Shoal context.
+
+``PgasState`` is the functional analogue of everything the GAScore /
+handler thread owns per kernel in the paper: the shared-memory segment
+(this kernel's partition of the global address space), the reply/credit
+counter file, and a few counters we keep for the Table-I-style cost
+accounting.  All Shoal ops thread it explicitly (dataflow has no mutable
+runtime).
+
+``ShoalContext`` is the trace-time configuration: which mesh axes
+enumerate kernels, the transport (acked/async + packet limit), and the
+handler table.  It is the analogue of a linked Shoal library instance.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import handlers as hd
+from repro.runtime.transport import Transport, TCP
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PgasState:
+    """Per-kernel runtime state (a pytree; leaves are per-device arrays)."""
+
+    segment: jnp.ndarray          # (segment_words,) shared-memory partition
+    credits: jnp.ndarray          # (NUM_TOKENS,) int32 reply counters
+    barrier_epoch: jnp.ndarray    # () int32
+    rx_words: jnp.ndarray         # () int32 total words received
+    tx_words: jnp.ndarray         # () int32 total words sent
+    error: jnp.ndarray            # () int32 sticky error bits
+
+    @staticmethod
+    def make(segment_words: int, dtype=jnp.float32) -> "PgasState":
+        return PgasState(
+            segment=jnp.zeros((segment_words,), dtype),
+            credits=jnp.zeros((hd.NUM_TOKENS,), jnp.int32),
+            barrier_epoch=jnp.zeros((), jnp.int32),
+            rx_words=jnp.zeros((), jnp.int32),
+            tx_words=jnp.zeros((), jnp.int32),
+            error=jnp.zeros((), jnp.int32),
+        )
+
+
+# error bits
+ERR_WAIT_UNDERFLOW = 1  # wait_replies saw fewer credits than expected
+
+
+@dataclasses.dataclass(frozen=True)
+class ShoalContext:
+    """Trace-time Shoal configuration.
+
+    Attributes:
+      mesh: the device mesh (cluster).
+      axes: mesh axis name(s) that enumerate kernels, row-major.
+      transport: delivery semantics + packet limit (TCP/UDP analogue).
+      handlers: the frozen handler table.
+      segment_words: words in each kernel's segment.
+    """
+
+    mesh: Any
+    axes: tuple[str, ...]
+    transport: Transport = TCP
+    handlers: hd.HandlerTable = dataclasses.field(default_factory=lambda: hd.DEFAULT_TABLE)
+    segment_words: int = 4096
+
+    @property
+    def num_kernels(self) -> int:
+        return math.prod(self.mesh.shape[a] for a in self.axes)
+
+    def my_id(self):
+        """Flattened kernel ID of the executing device (inside shard_map)."""
+        return lax.axis_index(self.axes)
+
+    def make_state(self, dtype=jnp.float32) -> PgasState:
+        return PgasState.make(self.segment_words, dtype)
+
+    def spmd(self, fn, state_spec=None, **shard_map_kwargs):
+        """Wrap ``fn`` in shard_map over the kernel axes.
+
+        Every PgasState leaf is per-kernel, i.e. sharded over the
+        (flattened) kernel axes on its leading dim when viewed globally;
+        we use rank-preserving specs: leading dim split over axes.
+        """
+        from jax.sharding import PartitionSpec as P
+
+        spec = P(self.axes) if state_spec is None else state_spec
+        return jax.shard_map(
+            fn, mesh=self.mesh, in_specs=spec, out_specs=spec, **shard_map_kwargs
+        )

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Three kernels, each with a pure-jnp oracle (``ref.py``) and a jit'd
+wrapper (``ops.py``), validated in interpret mode on CPU (TPU is the
+lowering target):
+
+* ``jacobi``      — the paper's stencil application hot loop (Sec. IV-C).
+* ``am_pack``     — strided gather/scatter for Strided Long AMs: the
+  GAScore's DataMover datapath (Sec. III-C).
+* ``attention``   — blocked causal flash attention: the dominant FLOP
+  consumer of the LM framework the Shoal substrate carries.
+* ``gascore_dma`` — ring all-reduce on ``pltpu.make_async_remote_copy``:
+  the literal GAScore (one-sided RDMA Long put + ADD handler) as a
+  Pallas kernel, validated via Pallas distributed interpret.
+"""

@@ -1,0 +1,20 @@
+"""Oracles for the strided AM pack/unpack (GAScore DataMover path)."""
+
+import jax.numpy as jnp
+
+
+def am_pack_ref(segment: jnp.ndarray, addr: int, stride: int,
+                blk_words: int, nblocks: int) -> jnp.ndarray:
+    """Gather ``nblocks`` blocks of ``blk_words`` at addr + i*stride from
+    a 1-D segment into a contiguous payload."""
+    idx = (addr + stride * jnp.arange(nblocks)[:, None]
+           + jnp.arange(blk_words)[None, :])
+    return segment[idx.reshape(-1)]
+
+
+def am_unpack_ref(segment: jnp.ndarray, payload: jnp.ndarray, addr: int,
+                  stride: int, blk_words: int, nblocks: int) -> jnp.ndarray:
+    """Scatter a packed payload back at addr + i*stride."""
+    idx = (addr + stride * jnp.arange(nblocks)[:, None]
+           + jnp.arange(blk_words)[None, :])
+    return segment.at[idx.reshape(-1)].set(payload)

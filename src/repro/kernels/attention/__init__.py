@@ -1,0 +1,4 @@
+from repro.kernels.attention.ops import flash_attention
+from repro.kernels.attention.ref import attention_ref
+
+__all__ = ["flash_attention", "attention_ref"]

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for causal attention."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  sm_scale: float | None = None) -> jnp.ndarray:
+    """q,k,v: (BH, S, dh) -> (BH, S, dh)."""
+    s = q.shape[1]
+    dh = q.shape[2]
+    scale = sm_scale if sm_scale is not None else 1.0 / np.sqrt(dh)
+    logits = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bqk,bkd->bqd", probs, v)

@@ -1,0 +1,4 @@
+from repro.kernels.gascore_dma.ops import ring_allreduce_dma
+from repro.kernels.gascore_dma.ref import ring_allreduce_ref
+
+__all__ = ["ring_allreduce_dma", "ring_allreduce_ref"]

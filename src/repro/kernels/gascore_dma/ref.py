@@ -1,0 +1,7 @@
+"""Oracle: the ring all-reduce is just a psum."""
+
+import jax
+
+
+def ring_allreduce_ref(x, axis_name):
+    return jax.lax.psum(x, axis_name)

@@ -1,0 +1,36 @@
+"""jit'd wrappers for the Jacobi kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.jacobi.jacobi import jacobi_step_pallas
+from repro.kernels.jacobi.ref import jacobi_step_ref
+
+
+def _pick_block_rows(m: int, want: int = 256) -> int:
+    for b in (want, 128, 64, 32, 16, 8, 4, 2, 1):
+        if m % b == 0:
+            return b
+    return 1
+
+
+def jacobi_step(x: jnp.ndarray, *, use_pallas: bool = True,
+                interpret: bool = True) -> jnp.ndarray:
+    """One iteration; pallas kernel or jnp oracle."""
+    if not use_pallas:
+        return jacobi_step_ref(x)
+    return jacobi_step_pallas(x, block_rows=_pick_block_rows(x.shape[0]),
+                              interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "use_pallas", "interpret"))
+def jacobi_run(x: jnp.ndarray, iters: int, *, use_pallas: bool = False,
+               interpret: bool = True) -> jnp.ndarray:
+    """``iters`` Jacobi iterations (lax.fori_loop over the step)."""
+    def body(_, g):
+        return jacobi_step(g, use_pallas=use_pallas, interpret=interpret)
+    return jax.lax.fori_loop(0, iters, body, x)

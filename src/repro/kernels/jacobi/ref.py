@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the Jacobi von Neumann stencil (paper Sec. IV-C)."""
+
+import jax.numpy as jnp
+
+
+def jacobi_step_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """One Jacobi iteration: interior cells become the mean of their four
+    von Neumann neighbors; boundary cells are fixed (Dirichlet)."""
+    up = x[:-2, 1:-1]
+    down = x[2:, 1:-1]
+    left = x[1:-1, :-2]
+    right = x[1:-1, 2:]
+    interior = 0.25 * (up + down + left + right)
+    return x.at[1:-1, 1:-1].set(interior.astype(x.dtype))

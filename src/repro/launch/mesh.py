@@ -1,0 +1,27 @@
+"""Production mesh definitions (TPU v5e pods).
+
+A function, not a module-level constant: importing this module must
+never touch JAX device state (the dry-run sets the host-device-count
+flag before first JAX init).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods over DCN when ``multi_pod``.
+
+    Axes: ``data`` = batch parallelism (+FSDP weight sharding for the
+    large configs), ``model`` = tensor/expert parallelism, ``pod`` = the
+    DCN axis (stacked onto data parallelism by the trainer).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+
+
+def dp_axes_of(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

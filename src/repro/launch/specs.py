@@ -1,0 +1,153 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+The dry-run lowers real step functions against these: weak-type-correct,
+sharding-annotated, zero device memory.  Serve-path params are bf16
+(inference checkpoints); train-path params are f32 masters inside the
+TrainState.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeSpec
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig
+from repro.training.train import Trainer
+
+
+def _sds(tree, shardings=None):
+    def one(x, s=None):
+        return jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s)
+    if shardings is None:
+        return jax.tree.map(one, tree)
+    return jax.tree.map(one, tree, shardings)
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _in_sds(model: Model, mesh, shape_t, dtype, spec: P):
+    """SDS with a divisibility-sanitized sharding (argument shardings,
+    unlike constraints, must divide evenly — long_500k has batch 1)."""
+    spec = model._sanitize(spec, shape_t)
+    return jax.ShapeDtypeStruct(shape_t, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def batch_specs(model: Model, shape: ShapeSpec, mesh, dp=None):
+    """Training/prefill batch ShapeDtypeStructs with DP sharding."""
+    cfg = model.cfg
+    B, S = shape.global_batch, shape.seq_len
+    dp = model.dp_axes if dp is None else dp
+    seq = model._seq_axis()   # model axis when cfg.seq_shard, else None
+    out = {}
+    if cfg.frontend == "embeddings":
+        out["embeddings"] = _in_sds(model, mesh, (B, S, cfg.d_model),
+                                    jnp.bfloat16, P(dp, seq, None))
+    else:
+        out["tokens"] = _in_sds(model, mesh, (B, S), jnp.int32, P(dp, seq))
+    if shape.mode == "train":
+        out["labels"] = _in_sds(model, mesh, (B, S), jnp.int32, P(dp, seq))
+    if cfg.family == "vlm":
+        out["image_feats"] = _in_sds(model, mesh,
+                                     (B, cfg.n_image_tokens, cfg.d_model),
+                                     jnp.bfloat16, P(dp, None, None))
+    return out
+
+
+def train_args(model: Model, trainer: Trainer, shape: ShapeSpec, mesh):
+    """(state_sds, batch_sds) for jit(train_step).lower."""
+    state_shape = jax.eval_shape(trainer.init_state, jax.random.PRNGKey(0))
+    shardings = trainer.state_shardings(state_shape)
+    state_sds = _sds(state_shape, shardings)
+    return state_sds, batch_specs(model, shape, mesh, dp=trainer.dp_axes)
+
+
+def _cache_pspec(path, leaf, dp, m, seq=None, slot_shard=False) -> P:
+    name = str(getattr(path[-1], "key", path[-1]))
+    nd = leaf.ndim              # includes leading segment-stack dim
+    if name in ("k", "v"):       # (reps,B,W,K,dh)
+        if seq is not None or slot_shard:
+            # slots over the model axis: decode attention then runs a
+            # partial softmax per shard and combines with tiny psums —
+            # measured 700x less decode wire than dh-sharding (§Perf)
+            return P(None, dp, seq or m, None, None)
+        return P(None, dp, None, None, m)
+    if name == "pos" and (seq is not None or slot_shard):
+        return P(None, dp, seq or m)
+    if name in ("ckv", "kr"):    # (reps,B,W,c)
+        if slot_shard:
+            return P(None, dp, m, None)
+        return P(None, dp, None, m)
+    if name == "C":              # (reps,B,nh,dh,dh)
+        return P(None, dp, None, m, None)
+    if name == "n" and nd == 4:  # (reps,B,nh,dh)
+        return P(None, dp, None, m)
+    if name == "conv" and nd == 4:
+        return P(None, dp, None, m)
+    if name in ("h", "c", "n", "m") and nd == 3:
+        return P(None, dp, m)
+    if name == "pos":
+        return P(None, dp, None)
+    if name == "m" and nd == 3:
+        return P(None, dp, None)
+    return P(*((None,) * nd))
+
+
+def serve_params_sds(model: Model, mesh):
+    """bf16 inference params with the model's PartitionSpecs."""
+    p_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = model.param_pspecs(p_shape)
+    shardings = _named(mesh, pspecs)
+
+    def one(x, s):
+        dt = jnp.bfloat16 if jnp.issubdtype(x.dtype, jnp.floating) else x.dtype
+        return jax.ShapeDtypeStruct(x.shape, dt, sharding=s)
+
+    return jax.tree.map(one, p_shape, shardings)
+
+
+def cache_sds(model: Model, B: int, slots: int, mesh, slot_shard=False):
+    cache_shape = jax.eval_shape(
+        lambda: model.make_cache(B, slots))
+    dp = model.dp_axes
+
+    def one(path, x):
+        spec = model._sanitize(
+            _cache_pspec(path, x, dp, model.model_axis,
+                         seq=model._seq_axis(), slot_shard=slot_shard),
+            x.shape)
+        return jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def decode_args(model: Model, shape: ShapeSpec, mesh):
+    """(params, cache, token, pos) SDS for jit(decode_step).lower."""
+    cfg = model.cfg
+    B = shape.global_batch
+    dp = model.dp_axes
+    params = serve_params_sds(model, mesh)
+    cache = cache_sds(model, B, shape.seq_len, mesh, slot_shard=True)
+    if cfg.frontend == "embeddings":
+        token = _in_sds(model, mesh, (B, 1, cfg.d_model), jnp.bfloat16,
+                        P(dp, None, None))
+    else:
+        token = _in_sds(model, mesh, (B, 1), jnp.int32, P(dp, None))
+    pos = _in_sds(model, mesh, (B,), jnp.int32, P(dp))
+    return params, cache, token, pos
+
+
+def prefill_args(model: Model, shape: ShapeSpec, mesh):
+    """(params, batch, cache) SDS for jit(prefill).lower.  Window archs
+    allocate only window-deep kv slots (handled by make_cache)."""
+    params = serve_params_sds(model, mesh)
+    batch = batch_specs(model, shape, mesh)
+    cache = cache_sds(model, shape.global_batch, shape.seq_len, mesh)
+    return params, batch, cache

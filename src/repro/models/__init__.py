@@ -1,0 +1,16 @@
+"""Model substrate: the 10 assigned architectures as composable blocks.
+
+Families: dense GQA transformers (tinyllama, deepseek-7b, qwen2-1.5b/72b),
+MoE (dbrx, deepseek-v2 with MLA), audio decoder (musicgen), VLM with
+cross-attention (llama-3.2-vision), hybrid recurrent (recurrentgemma
+RG-LRU + local attention), and xLSTM (sLSTM/mLSTM).
+
+Everything is functional JAX: params are dict pytrees with layer-stacked
+leaves, forward passes ``lax.scan`` over homogeneous layer segments (so
+a 100-layer model lowers to a small HLO), and sharding is expressed as
+PartitionSpec trees computed from logical axis rules (DESIGN.md Sec. 4).
+"""
+
+from repro.models.model import Model, ModelConfig, build_model
+
+__all__ = ["Model", "ModelConfig", "build_model"]

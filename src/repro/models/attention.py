@@ -1,0 +1,287 @@
+"""Attention variants: GQA/MHA (+QKV bias), local windowed, cross-attention,
+and DeepSeek-V2 MLA (multi-head latent attention) with absorbed-decode.
+
+Shape conventions: activations (B, S, d); heads H, kv-heads K, head dim
+``dh``; caches carry absolute slot positions so sliding-window decode can
+use a ring buffer of ``window`` slots instead of the full sequence.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import blocks as bl
+
+
+# --------------------------------------------------------------------------
+# masked softmax attention core
+# --------------------------------------------------------------------------
+
+def _attend(q, k, v, q_pos, k_pos, *, causal=True, window=0, logit_cap=0.0):
+    """q: (B,S,K,G,dh) k/v: (B,T,K,dh); positions give masking.
+
+    Returns (B,S,K,G,dh).  Slots with k_pos < 0 are invalid (unwritten
+    ring-buffer slots).
+    """
+    dh = q.shape[-1]
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k).astype(jnp.float32)
+    scores = scores / np.sqrt(dh)
+    if logit_cap:
+        scores = logit_cap * jnp.tanh(scores / logit_cap)
+    mask = (k_pos[:, None, :] >= 0)
+    if causal:
+        mask &= k_pos[:, None, :] <= q_pos[:, :, None]
+    if window:
+        mask &= k_pos[:, None, :] > q_pos[:, :, None] - window
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgst,btkh->bskgh", probs, v)
+
+
+# --------------------------------------------------------------------------
+# GQA (covers MHA when K == H and MQA when K == 1)
+# --------------------------------------------------------------------------
+
+def init_gqa(key, d, H, K, dh, bias: bool = False):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": bl.dense_init(ks[0], (d, H * dh)),
+        "wk": bl.dense_init(ks[1], (d, K * dh)),
+        "wv": bl.dense_init(ks[2], (d, K * dh)),
+        "wo": bl.dense_init(ks[3], (H * dh, d)),
+    }
+    if bias:
+        p["bq"] = jnp.zeros((H * dh,), jnp.float32)
+        p["bk"] = jnp.zeros((K * dh,), jnp.float32)
+        p["bv"] = jnp.zeros((K * dh,), jnp.float32)
+    return p
+
+
+def make_kv_cache(B, slots, K, dh, dtype=jnp.bfloat16):
+    return {
+        "k": jnp.zeros((B, slots, K, dh), dtype),
+        "v": jnp.zeros((B, slots, K, dh), dtype),
+        "pos": -jnp.ones((B, slots), jnp.int32),
+    }
+
+
+def _ring_write(cache, k_new, v_new, positions):
+    """Write S new entries at slots pos % W (S <= W guaranteed by caller)."""
+    W = cache["k"].shape[1]
+    slots = positions % W                       # (B, S)
+    k = _scatter_slots(cache["k"], k_new, slots)
+    v = _scatter_slots(cache["v"], v_new, slots)
+    pos = jax.vmap(lambda p, s, n: p.at[s].set(n))(cache["pos"], slots, positions)
+    return {"k": k, "v": v, "pos": pos}
+
+
+def _scatter_slots(buf, new, slots):
+    # buf (B,W,K,dh), new (B,S,K,dh), slots (B,S)
+    return jax.vmap(lambda b, n, s: b.at[s].set(n))(buf, new, slots)
+
+
+def gqa(params, x, positions, *, H, K, dh, causal=True, window=0,
+        rope_base=10000.0, cache=None, logit_cap=0.0, ring_ctx=None):
+    """Full GQA layer: qkv proj -> rope -> attend -> out proj.
+
+    ``positions``: (B, S) absolute positions of x.
+    ``cache``: None for self-contained (training) attention, else a ring
+    cache dict; returns (out, new_cache).
+    ``ring_ctx``: (mesh, seq_axis, dp_axes) — sequence-parallel exact
+    ring attention for long prefill/train (cfg.seq_shard); assumes the
+    attention context is exactly x (fresh-prefill or training).
+    """
+    B, S, _ = x.shape
+    q = x @ params["wq"].astype(x.dtype)
+    k = x @ params["wk"].astype(x.dtype)
+    v = x @ params["wv"].astype(x.dtype)
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = q.reshape(B, S, K, H // K, dh)
+    k = k.reshape(B, S, K, dh)
+    v = v.reshape(B, S, K, dh)
+    q = bl.apply_rope(q.reshape(B, S, K * (H // K), dh), positions, rope_base)
+    q = q.reshape(B, S, K, H // K, dh)
+    k = bl.apply_rope(k, positions, rope_base)
+
+    if ring_ctx is not None and S > 1 and causal and not window:
+        from repro.models.ring_attention import ring_attention
+        mesh, seq_axis, dp_axes = ring_ctx
+        out = ring_attention(mesh, seq_axis, dp_axes, q, k, v, positions)
+        new_cache = None
+        if cache is not None:  # prefill: still record k/v for decode
+            W = cache["k"].shape[1]
+            if S > W:
+                kw, vw, pw = k[:, -W:], v[:, -W:], positions[:, -W:]
+            else:
+                kw, vw, pw = k, v, positions
+            new_cache = _ring_write(cache, kw.astype(cache["k"].dtype),
+                                    vw.astype(cache["v"].dtype), pw)
+        out = out.reshape(B, S, H * dh)
+        return out @ params["wo"].astype(x.dtype), new_cache
+
+    if cache is None:
+        out = _attend(q, k, v, positions, positions, causal=causal,
+                      window=window, logit_cap=logit_cap)
+        new_cache = None
+    else:
+        W = cache["k"].shape[1]
+        if S > W:  # prefill longer than the ring: only the last W matter
+            kw, vw, pw = k[:, -W:], v[:, -W:], positions[:, -W:]
+        else:
+            kw, vw, pw = k, v, positions
+        new_cache = _ring_write(cache, kw.astype(cache["k"].dtype),
+                                vw.astype(cache["v"].dtype), pw)
+        out = _attend(q, new_cache["k"].astype(q.dtype),
+                      new_cache["v"].astype(q.dtype), positions,
+                      new_cache["pos"], causal=causal, window=window,
+                      logit_cap=logit_cap)
+    out = out.reshape(B, S, H * dh)
+    return out @ params["wo"].astype(x.dtype), new_cache
+
+
+# --------------------------------------------------------------------------
+# cross-attention (llama-3.2-vision image layers)
+# --------------------------------------------------------------------------
+
+def init_cross(key, d, H, K, dh):
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": bl.dense_init(ks[0], (d, H * dh)),
+        "wk": bl.dense_init(ks[1], (d, K * dh)),
+        "wv": bl.dense_init(ks[2], (d, K * dh)),
+        "wo": bl.dense_init(ks[3], (H * dh, d)),
+        "gate": jnp.zeros((), jnp.float32),   # tanh-gated, starts closed
+        "kln": jnp.ones((dh,), jnp.float32),
+        "qln": jnp.ones((dh,), jnp.float32),
+    }
+
+
+def cross_attention(params, x, kv_feats, *, H, K, dh):
+    """q from text stream, k/v from (precomputed) image patch embeddings
+    (B, N, d); no causality, no rope (positions are in the patches)."""
+    B, S, _ = x.shape
+    N = kv_feats.shape[1]
+    q = (x @ params["wq"].astype(x.dtype)).reshape(B, S, K, H // K, dh)
+    k = (kv_feats.astype(x.dtype) @ params["wk"].astype(x.dtype)).reshape(B, N, K, dh)
+    v = (kv_feats.astype(x.dtype) @ params["wv"].astype(x.dtype)).reshape(B, N, K, dh)
+    q = bl.rms_norm(q, params["qln"])
+    k = bl.rms_norm(k, params["kln"])
+    q_pos = jnp.zeros((B, S), jnp.int32)
+    k_pos = jnp.zeros((B, N), jnp.int32)
+    out = _attend(q, k, v, q_pos, k_pos, causal=False)
+    out = out.reshape(B, S, H * dh) @ params["wo"].astype(x.dtype)
+    return jnp.tanh(params["gate"]).astype(x.dtype) * out
+
+
+# --------------------------------------------------------------------------
+# DeepSeek-V2 MLA
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLADims:
+    q_lora: int = 1536
+    kv_lora: int = 512
+    dh_nope: int = 128
+    dh_rope: int = 64
+    dh_v: int = 128
+
+
+def init_mla(key, d, H, dims: MLADims):
+    ks = jax.random.split(key, 8)
+    return {
+        "wdq": bl.dense_init(ks[0], (d, dims.q_lora)),
+        "qln": jnp.ones((dims.q_lora,), jnp.float32),
+        "wuq": bl.dense_init(ks[1], (dims.q_lora, H * (dims.dh_nope + dims.dh_rope))),
+        "wdkv": bl.dense_init(ks[2], (d, dims.kv_lora)),
+        "kvln": jnp.ones((dims.kv_lora,), jnp.float32),
+        "wkr": bl.dense_init(ks[3], (d, dims.dh_rope)),
+        "wuk": bl.dense_init(ks[4], (dims.kv_lora, H * dims.dh_nope)),
+        "wuv": bl.dense_init(ks[5], (dims.kv_lora, H * dims.dh_v)),
+        "wo": bl.dense_init(ks[6], (H * dims.dh_v, d)),
+    }
+
+
+def make_mla_cache(B, slots, dims: MLADims, dtype=jnp.bfloat16):
+    """MLA caches the *latent* c_kv + shared rope key: (kv_lora + dh_rope)
+    words/token vs 2*K*dh for GQA — the paper-config's memory saving."""
+    return {
+        "ckv": jnp.zeros((B, slots, dims.kv_lora), dtype),
+        "kr": jnp.zeros((B, slots, dims.dh_rope), dtype),
+        "pos": -jnp.ones((B, slots), jnp.int32),
+    }
+
+
+def _mla_qkr(params, x, positions, H, dims):
+    B, S, _ = x.shape
+    cq = bl.rms_norm(x @ params["wdq"].astype(x.dtype), params["qln"])
+    q = (cq @ params["wuq"].astype(x.dtype)).reshape(B, S, H, dims.dh_nope + dims.dh_rope)
+    q_nope, q_rope = q[..., :dims.dh_nope], q[..., dims.dh_nope:]
+    q_rope = bl.apply_rope(q_rope, positions)
+    kr = bl.apply_rope((x @ params["wkr"].astype(x.dtype))[:, :, None, :], positions)[:, :, 0]
+    ckv = bl.rms_norm(x @ params["wdkv"].astype(x.dtype), params["kvln"])
+    return q_nope, q_rope, ckv, kr
+
+
+def mla(params, x, positions, *, H, dims: MLADims, cache=None):
+    """Training/prefill form (materialized per-head k,v) and absorbed
+    decode form (scores in latent space; the DeepSeek-V2 inference trick)
+    selected by whether a cache is provided and S == 1."""
+    B, S, _ = x.shape
+    q_nope, q_rope, ckv, kr = _mla_qkr(params, x, positions, H, dims)
+
+    if cache is not None:
+        W = cache["ckv"].shape[1]
+        if S > W:
+            ckv_w, kr_w, pw = ckv[:, -W:], kr[:, -W:], positions[:, -W:]
+        else:
+            ckv_w, kr_w, pw = ckv, kr, positions
+        slots = pw % W
+        cache = {
+            "ckv": _scatter2(cache["ckv"], ckv_w.astype(cache["ckv"].dtype), slots),
+            "kr": _scatter2(cache["kr"], kr_w.astype(cache["kr"].dtype), slots),
+            "pos": jax.vmap(lambda p, s, n: p.at[s].set(n))(cache["pos"], slots, pw),
+        }
+        ckv_all = cache["ckv"].astype(x.dtype)
+        kr_all = cache["kr"].astype(x.dtype)
+        k_pos = cache["pos"]
+    else:
+        ckv_all, kr_all, k_pos = ckv, kr, positions
+
+    if cache is not None and S == 1:
+        # absorbed decode: q_c = q_nope @ W_uk^T  (per head, into latent)
+        wuk = params["wuk"].astype(x.dtype).reshape(dims.kv_lora, H, dims.dh_nope)
+        q_c = jnp.einsum("bshn,chn->bshc", q_nope, wuk)
+        s_c = jnp.einsum("bshc,btc->bhst", q_c, ckv_all)
+        s_r = jnp.einsum("bshn,btn->bhst", q_rope, kr_all)
+        scores = (s_c + s_r).astype(jnp.float32) / np.sqrt(dims.dh_nope + dims.dh_rope)
+        mask = (k_pos[:, None, :] >= 0) & (k_pos[:, None, :] <= positions[:, :, None])
+        scores = jnp.where(mask[:, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        o_c = jnp.einsum("bhst,btc->bshc", probs, ckv_all)     # latent output
+        wuv = params["wuv"].astype(x.dtype).reshape(dims.kv_lora, H, dims.dh_v)
+        out = jnp.einsum("bshc,chv->bshv", o_c, wuv)
+    else:
+        T = ckv_all.shape[1]
+        k_nope = (ckv_all @ params["wuk"].astype(x.dtype)).reshape(B, T, H, dims.dh_nope)
+        v = (ckv_all @ params["wuv"].astype(x.dtype)).reshape(B, T, H, dims.dh_v)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_all[:, :, None], (B, T, H, dims.dh_rope))], -1)
+        # K = H, G = 1 layout for the shared attention core
+        q = jnp.concatenate([q_nope, q_rope], -1)[:, :, :, None, :]  # (B,S,H,1,dh)
+        out = _attend(q, k, v, positions, k_pos, causal=True)
+        out = out.reshape(B, S, H, dims.dh_v)
+
+    out = out.reshape(B, S, H * dims.dh_v)
+    return out @ params["wo"].astype(x.dtype), cache
+
+
+def _scatter2(buf, new, slots):
+    # buf (B,W,C), new (B,S,C), slots (B,S)
+    return jax.vmap(lambda b, n, s: b.at[s].set(n))(buf, new, slots)

@@ -1,0 +1,107 @@
+"""Shared neural blocks: norms, MLPs, rotary embeddings, initializers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# initializers (params are created in float32; compute casts per policy)
+# --------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis: int = 0):
+    fan_in = shape[in_axis] if shape else 1
+    scale = 1.0 / np.sqrt(max(fan_in, 1))
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def embed_init(key, shape):
+    return jax.random.normal(key, shape, jnp.float32) * 0.02
+
+
+def zeros_init(_key, shape):
+    return jnp.zeros(shape, jnp.float32)
+
+
+def ones_init(_key, shape):
+    return jnp.ones(shape, jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(dt)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def swiglu(x, wg, wu, wd):
+    """SwiGLU gated MLP (llama/qwen/deepseek family)."""
+    g = jax.nn.silu(x @ wg.astype(x.dtype))
+    u = x @ wu.astype(x.dtype)
+    return (g * u) @ wd.astype(x.dtype)
+
+
+def gelu_mlp(x, wi, bi, wo, bo):
+    """Plain GELU MLP (musicgen family)."""
+    h = jax.nn.gelu(x @ wi.astype(x.dtype) + bi.astype(x.dtype))
+    return h @ wo.astype(x.dtype) + bo.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope_freqs(dh: int, base: float = 10000.0):
+    return 1.0 / (base ** (np.arange(0, dh, 2, dtype=np.float32) / dh))
+
+
+def apply_rope(x, positions, base: float = 10000.0):
+    """x: (..., S, H, dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, base))            # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, dh/2)
+    angles = angles[..., None, :]                         # (..., S, 1, dh/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+
+def softmax_xent(logits, labels, mask=None, z_loss: float = 0.0):
+    """Mean next-token cross-entropy; logits may be vocab-sharded (GSPMD
+    inserts the reductions).  ``mask`` is 1 for counted positions."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    if mask is None:
+        return jnp.mean(loss)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(loss * mask) / jnp.maximum(jnp.sum(mask), 1.0)

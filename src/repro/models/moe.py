@@ -1,0 +1,274 @@
+"""Mixture-of-experts with expert parallelism (dbrx, deepseek-v2).
+
+Routing is top-k softmax gating; experts are SwiGLU MLPs with stacked
+weights (E, d, d_ff_e).  Dispatch is *sort-based* (argsort tokens by
+expert, gather up to a static capacity per expert, expert einsum,
+scatter-combine) so compiled FLOPs reflect only *active* expert compute
+— a dense one-hot dispatch would inflate the roofline's compute term by
+E/top_k.
+
+Expert parallelism is a manual ``shard_map`` island inside the otherwise
+GSPMD-sharded model (DESIGN.md Sec. 4): experts are sharded over the
+``model`` axis, tokens are replicated across it within each data shard;
+each device gathers tokens routed to *its* experts locally and the
+combine is a single psum over the model axis — the Shoal Vectored-AM
+pattern specialized to "dispatch local, combine collective".  The pure
+single-device path (mesh=None) is the smoke-test/reference oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax import lax
+import jax.numpy as jnp
+
+from repro.models import blocks as bl
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEDims:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0            # deepseek-v2 shared experts
+    capacity_factor: float = 1.25
+    router_norm: bool = True     # normalize top-k gate weights to sum 1
+    dispatch: str = "psum"       # psum | a2a | rs  (EP combine strategy)
+                                 # rs: tokens S-sharded at the boundary;
+                                 # bf16 all-gather in, f32 reduce-scatter
+                                 # out (half the psum wire bytes)
+
+
+def init_moe(key, d, dims: MoEDims):
+    ks = jax.random.split(key, 5)
+    E, fe = dims.n_experts, dims.d_ff_expert
+    p = {
+        "router": bl.dense_init(ks[0], (d, E)),
+        "wg": bl.dense_init(ks[1], (E, d, fe), in_axis=1),
+        "wu": bl.dense_init(ks[2], (E, d, fe), in_axis=1),
+        "wd": bl.dense_init(ks[3], (E, fe, d), in_axis=1),
+    }
+    if dims.n_shared:
+        fs = dims.d_ff_expert * dims.n_shared
+        ks2 = jax.random.split(ks[4], 3)
+        p["ws_g"] = bl.dense_init(ks2[0], (d, fs))
+        p["ws_u"] = bl.dense_init(ks2[1], (d, fs))
+        p["ws_d"] = bl.dense_init(ks2[2], (fs, d))
+    return p
+
+
+def _route(router_w, x, dims: MoEDims):
+    """Top-k gating. x: (T, d) -> (gates (T, k), experts (T, k), aux_loss)."""
+    logits = (x @ router_w.astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, dims.top_k)
+    if dims.router_norm:
+        gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    # Switch-style load-balance auxiliary loss
+    T = x.shape[0]
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros((dims.n_experts,), jnp.float32)
+    ce = ce.at[experts.reshape(-1)].add(1.0) / (T * dims.top_k)
+    aux = dims.n_experts * jnp.sum(me * ce)
+    return gates.astype(x.dtype), experts, aux
+
+
+def _expert_compute(p, x_e):
+    """x_e: (E_local, C, d) -> (E_local, C, d) via per-expert SwiGLU."""
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x_e, p["wg"].astype(x_e.dtype)))
+    u = jnp.einsum("ecd,edf->ecf", x_e, p["wu"].astype(x_e.dtype))
+    return jnp.einsum("ecf,efd->ecd", g * u, p["wd"].astype(x_e.dtype))
+
+
+def moe_ffn(p, x, dims: MoEDims):
+    """Single-device reference MoE feed-forward over x (B, S, d) — the
+    oracle the EP island (:func:`moe_routed_island`) is tested against.
+    Includes the shared experts."""
+    B, S, d = x.shape
+    T = B * S
+    xf = x.reshape(T, d)
+    E = dims.n_experts
+    capacity = max(1, int(T * dims.top_k * dims.capacity_factor / E))
+    out, aux = _dispatch_local(p, xf, dims, 0, E, capacity)
+    if dims.n_shared:
+        out = out + bl.swiglu(xf, p["ws_g"], p["ws_u"], p["ws_d"])
+    return out.reshape(B, S, d), aux
+
+
+def moe_routed_island(p_slab, x32, dims: MoEDims, *, model_axis: str,
+                      all_axes: tuple, fsdp_axis: str | None,
+                      compute_dtype):
+    """Expert-parallel routed-experts body (runs FULLY MANUAL inside
+    shard_map over every mesh axis).
+
+    Per device: tokens = this DP shard's (B_loc, S, d); experts = slab
+    [shard*E_local, ...) of the ``model`` axis, FSDP-sharded on the d/fe
+    dim over ``fsdp_axis``.  Steps:
+
+      1. all-gather the expert slab over the FSDP axis (the explicit
+         ZeRO-3 weight gather; bf16 on the wire),
+      2. sort-based local dispatch for local experts on local tokens,
+      3. psum the combine over the model axis (f32 on the wire: bf16
+         all-reduce trips an XLA-CPU ChangeOpDataType crash, and f32
+         accumulation is standard practice anyway).
+
+    The island boundary is f32 (``x32``) so every autodiff-inserted
+    collective (the dx psum over ``model``) is f32 too.  Shared experts
+    and the dense path live OUTSIDE (plain GSPMD code in model.py).
+    """
+    B, S, d = x32.shape
+    xf = x32.astype(compute_dtype).reshape(B * S, d)
+
+    def gather(w, dim):
+        w = w.astype(compute_dtype)
+        if fsdp_axis is None:
+            return w
+        return jax.lax.all_gather(w, fsdp_axis, axis=dim, tiled=True)
+
+    p_local = {
+        "router": p_slab["router"].astype(compute_dtype),
+        "wg": gather(p_slab["wg"], 1),
+        "wu": gather(p_slab["wu"], 1),
+        "wd": gather(p_slab["wd"], 2),
+    }
+    E_local = p_local["wg"].shape[0]
+    shard = jax.lax.axis_index(model_axis)
+    T = xf.shape[0]
+    if dims.dispatch == "a2a":
+        n_shards = dims.n_experts // E_local
+        out, aux = _dispatch_a2a(p_local, xf, dims, shard, E_local,
+                                 n_shards, model_axis)
+        out = out.astype(jnp.float32)
+    elif dims.dispatch == "rs":
+        # tokens arrive SEQUENCE-sharded: gather them (bf16 wire), run the
+        # local-expert dispatch over the full token set, and hand back only
+        # this shard's token slice via reduce-scatter (f32) — half the
+        # all-reduce bytes, and both boundaries match the S-sharded
+        # residual stream (no reshard at entry/exit).
+        n_shards = dims.n_experts // E_local
+        x_full = jax.lax.all_gather(xf, model_axis, axis=0, tiled=True)
+        T_full = x_full.shape[0]
+        capacity = max(1, int(T_full * dims.top_k * dims.capacity_factor
+                              / dims.n_experts))
+        out, aux = _dispatch_local(p_local, x_full, dims, shard * E_local,
+                                   E_local, capacity)
+        out = jax.lax.psum_scatter(out.astype(jnp.float32), model_axis,
+                                   scatter_dimension=0, tiled=True)
+    else:
+        capacity = max(1, int(T * dims.top_k * dims.capacity_factor
+                              / dims.n_experts))
+        out, aux = _dispatch_local(p_local, xf, dims, shard * E_local,
+                                   E_local, capacity)
+        out = jax.lax.psum(out.astype(jnp.float32), model_axis)
+    aux = jax.lax.pmean(aux, all_axes)
+    return out.reshape(B, S, d), aux
+
+
+def _dispatch_a2a(p_local, x, dims: MoEDims, shard, E_local: int,
+                  n_shards: int, model_axis: str):
+    """Vectored-AM EP: route local tokens, all-to-all them to their
+    experts' owner shards, compute, all-to-all results back, combine.
+
+    This is the paper's Vectored Long AM pattern on ICI (DESIGN.md): one
+    hardware all-to-all scatters every token block to its remote
+    address.  Tokens here are SEQUENCE-sharded over the model axis (the
+    island boundary reshards), so wire bytes scale with T_local*top_k*d
+    in bf16 instead of T_replicated*d in f32 psum.
+
+    Static shapes: per-destination bucket capacity
+    C = ceil(T * top_k * cf / n_shards); overflowing pairs are dropped
+    (standard capacity semantics).
+    """
+    T, d = x.shape
+    gates, experts, aux = _route(p_local["router"], x, dims)
+    k = dims.top_k
+    flat_e = experts.reshape(-1)                    # (T*k,)
+    flat_g = gates.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(T), k)
+    dest = flat_e // E_local                        # owner shard per pair
+
+    C = max(1, int(-(-T * k * dims.capacity_factor // n_shards)))
+    # rank of each pair within its destination bucket
+    order = jnp.argsort(dest, stable=True)
+    sorted_d = dest[order]
+    idx = jnp.arange(sorted_d.size)
+    first = jnp.searchsorted(sorted_d, jnp.arange(n_shards))
+    rank_sorted = idx - first[sorted_d]
+    rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
+    ok = rank < C
+    slot = jnp.where(ok, dest * C + rank, n_shards * C)
+
+    send_x = jnp.zeros((n_shards * C + 1, d), x.dtype)
+    send_x = send_x.at[slot].set(jnp.where(ok[:, None], x[flat_tok], 0))
+    send_e = jnp.zeros((n_shards * C + 1,), jnp.int32)
+    send_e = send_e.at[slot].set(jnp.where(ok, flat_e + 1, 0))  # 0 = empty
+
+    # ship buckets to their owners (the vectored AM / hardware a2a)
+    rx = lax.all_to_all(send_x[:-1].reshape(n_shards, C, d), model_axis,
+                        split_axis=0, concat_axis=0, tiled=False)
+    re = lax.all_to_all(send_e[:-1].reshape(n_shards, C), model_axis,
+                        split_axis=0, concat_axis=0, tiled=False)
+    rx = rx.reshape(n_shards * C, d)
+    re = re.reshape(n_shards * C)
+
+    # local second-stage dispatch: received rows -> local expert slots
+    valid = re > 0
+    le = jnp.clip(re - 1 - shard * E_local, 0, E_local - 1)
+    C2 = max(1, int(-(-n_shards * C // E_local)))
+    order2 = jnp.argsort(jnp.where(valid, le, E_local), stable=True)
+    sorted_le = jnp.where(valid, le, E_local)[order2]
+    idx2 = jnp.arange(sorted_le.size)
+    first2 = jnp.searchsorted(sorted_le, jnp.arange(E_local + 1))
+    rank2_sorted = idx2 - first2[sorted_le]
+    rank2 = jnp.zeros_like(rank2_sorted).at[order2].set(rank2_sorted)
+    ok2 = valid & (rank2 < C2)
+    slot2 = jnp.where(ok2, le * C2 + rank2, E_local * C2)
+
+    x_slots = jnp.zeros((E_local * C2 + 1, d), x.dtype)
+    x_slots = x_slots.at[slot2].set(jnp.where(ok2[:, None], rx, 0))
+    y_e = _expert_compute(p_local, x_slots[:-1].reshape(E_local, C2, d))
+    y_rows = jnp.where(
+        ok2[:, None],
+        y_e.reshape(E_local * C2, d)[jnp.clip(slot2, 0, E_local * C2 - 1)], 0)
+
+    # results travel home (reverse vectored AM)
+    ry = lax.all_to_all(y_rows.reshape(n_shards, C, d), model_axis,
+                        split_axis=0, concat_axis=0, tiled=False)
+    ry = ry.reshape(n_shards * C, d)
+    back = jnp.where(ok[:, None],
+                     ry[jnp.clip(slot, 0, n_shards * C - 1)], 0)
+    out = jnp.zeros((T, d), x.dtype).at[flat_tok].add(back * flat_g[:, None])
+    return out, aux
+
+
+def _dispatch_local(p_local, x, dims: MoEDims, e_lo, E_local: int,
+                    capacity: int):
+    """Sort-based dispatch for the E_local experts starting at ``e_lo``
+    (may be traced) whose weights are pre-sliced in ``p_local``.  Tokens
+    routed elsewhere contribute zero here (combined by the caller)."""
+    T, d = x.shape
+    gates, experts, aux = _route(p_local["router"], x, dims)
+    flat_e = experts.reshape(-1)
+    flat_g = gates.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(T), dims.top_k)
+
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    idx = jnp.arange(sorted_e.size)
+    first = jnp.searchsorted(sorted_e, jnp.arange(dims.n_experts))
+    rank_sorted = idx - first[sorted_e]
+    rank = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
+
+    local = (flat_e >= e_lo) & (flat_e < e_lo + E_local) & (rank < capacity)
+    slot = jnp.where(local, (flat_e - e_lo) * capacity + rank, E_local * capacity)
+    x_slots = jnp.zeros((E_local * capacity + 1, d), x.dtype)
+    x_slots = x_slots.at[slot].set(jnp.where(local[:, None], x[flat_tok], 0))
+    x_e = x_slots[:-1].reshape(E_local, capacity, d)
+    y_e = _expert_compute(p_local, x_e)
+    y_slots = y_e.reshape(E_local * capacity, d)
+    contrib = jnp.where(local[:, None],
+                        y_slots[jnp.clip(slot, 0, E_local * capacity - 1)], 0)
+    out = jnp.zeros((T, d), x.dtype).at[flat_tok].add(contrib * flat_g[:, None])
+    return out, aux

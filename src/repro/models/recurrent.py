@@ -1,0 +1,124 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The temporal-mixing block is: RMSNorm -> two branches
+  gate branch:      linear (d -> dr) -> GeLU
+  recurrent branch: linear (d -> dr) -> causal conv1d(width 4) -> RG-LRU
+-> elementwise product -> output linear (dr -> d).
+
+RG-LRU recurrence (per channel):
+  r_t = sigmoid(W_r x_t),  i_t = sigmoid(W_i x_t)
+  a_t = exp(-c * softplus(L) * r_t)           (c = 8)
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill evaluates the linear recurrence with an associative
+scan (log-depth, sequence-parallelizable — why this family runs the
+``long_500k`` shape); decode carries h as O(dr) state per layer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as bl
+
+_C = 8.0
+
+
+def init_rglru(key, d, dr, nb: int, conv_width: int = 4):
+    """``nb``: gate blocks (block-diagonal gate projections, as in the
+    reference RecurrentGemma implementation — also what makes the gates
+    tensor-parallel: blocks shard like heads)."""
+    ks = jax.random.split(key, 7)
+    drb = dr // nb
+    # Lambda parametrized so a = exp(-c*softplus(L)) starts near 0.9..0.999
+    lam = jnp.log(jnp.expm1(-jnp.log(
+        jax.random.uniform(ks[0], (dr,), jnp.float32, 0.9, 0.999)) / _C))
+    return {
+        "wx": bl.dense_init(ks[1], (d, dr)),       # recurrent branch in
+        "wy": bl.dense_init(ks[2], (d, dr)),       # gate branch in
+        "conv": bl.dense_init(ks[3], (conv_width, dr)) * 0.1,
+        "wr": bl.dense_init(ks[4], (nb, drb, drb), in_axis=1),  # recurrence gate
+        "wi": bl.dense_init(ks[5], (nb, drb, drb), in_axis=1),  # input gate
+        "lam": lam,
+        "wo": bl.dense_init(ks[6], (dr, d)),
+    }
+
+
+def _block_diag(x, w):
+    """x: (B,S,dr) @ block-diagonal w: (nb,drb,drb) -> (B,S,dr)."""
+    B, S, dr = x.shape
+    nb, drb, _ = w.shape
+    xb = x.reshape(B, S, nb, drb)
+    return jnp.einsum("bsnd,nde->bsne", xb, w.astype(x.dtype)).reshape(B, S, dr)
+
+
+def _conv1d_causal(x, w, state=None):
+    """Causal depthwise conv along S. x: (B,S,dr), w: (W,dr).
+
+    ``state``: (B, W-1, dr) trailing context for decode; returns
+    (out, new_state).
+    """
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(W))
+    new_state = xp[:, -(W - 1):]
+    return out, new_state
+
+
+def _lru_scan(a, bx):
+    """h_t = a_t h_{t-1} + b_t via associative scan over affine maps."""
+
+    def combine(l, r):
+        al, bl_ = l
+        ar, br = r
+        return al * ar, br + ar * bl_
+
+    a_c, b_c = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return b_c
+
+
+def rglru_block(p, x, *, state=None):
+    """x: (B,S,d).  ``state``: None (training) or dict with h (B,dr) and
+    conv (B,W-1,dr) for decode.  Returns (out, new_state)."""
+    xr = x @ p["wx"].astype(x.dtype)
+    gate = jax.nn.gelu(x @ p["wy"].astype(x.dtype))
+    conv_state = None if state is None else state["conv"]
+    xc, new_conv = _conv1d_causal(xr, p["conv"], conv_state)
+
+    r = jax.nn.sigmoid(_block_diag(xc, p["wr"])).astype(jnp.float32)
+    i = jax.nn.sigmoid(_block_diag(xc, p["wi"])).astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r             # (B,S,dr)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.clip(1.0 - jnp.square(a), 1e-12)) * (
+        i * xc.astype(jnp.float32))
+
+    if state is None:
+        h = _lru_scan(a, gated)
+        new_h = h[:, -1]
+    else:
+        h0 = state["h"].astype(jnp.float32)
+        if x.shape[1] == 1:
+            h = a * h0[:, None] + gated
+            new_h = h[:, -1]
+        else:  # chunked prefill with carried state
+            h = _lru_scan(a, gated)
+            # correct the scan with the carried initial state
+            a_c = jnp.exp(jnp.cumsum(log_a, axis=1))
+            h = h + a_c * h0[:, None]
+            new_h = h[:, -1]
+
+    out = (h.astype(x.dtype) * gate) @ p["wo"].astype(x.dtype)
+    new_state = {"h": new_h, "conv": new_conv}
+    return out, new_state
+
+
+def make_rglru_state(B, dr, conv_width: int = 4, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((B, dr), dtype),
+        "conv": jnp.zeros((B, conv_width - 1, dr), dtype),
+    }

@@ -1,0 +1,10 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import warmup_cosine
+from repro.optim.dist import (
+    compress_int8, decompress_int8, make_error_feedback, zero1_pspecs,
+)
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "warmup_cosine",
+    "compress_int8", "decompress_int8", "make_error_feedback", "zero1_pspecs",
+]

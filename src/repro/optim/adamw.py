@@ -1,0 +1,68 @@
+"""AdamW with decoupled weight decay and global-norm gradient clipping.
+
+Functional, pytree-generic, f32 optimizer state (m, v) regardless of the
+compute dtype; ZeRO-1 sharding of (m, v) is expressed through
+:func:`repro.optim.dist.zero1_pspecs`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float | Callable = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, grads, opt_state, params):
+    """Returns (new_params, new_opt_state, metrics)."""
+    count = opt_state["count"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-12))
+    lr = cfg.lr(count) if callable(cfg.lr) else cfg.lr
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / (1 - cfg.b1 ** count.astype(jnp.float32))
+        vh = v / (1 - cfg.b2 ** count.astype(jnp.float32))
+        step = mh / (jnp.sqrt(vh) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        new_p = p.astype(jnp.float32) - lr * (step + decay)
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gn, "lr": jnp.asarray(lr, jnp.float32)}
+    return new_params, {"m": new_m, "v": new_v, "count": count}, metrics

@@ -1,0 +1,76 @@
+"""Distributed-optimization tricks.
+
+* **int8 error-feedback gradient compression** for the thin inter-pod
+  (DCN) link: grads are quantized per-tensor to int8 before the pod-axis
+  reduction; the quantization residual is fed back into the next step's
+  grads so the *accumulated* error stays bounded (1-bit/‖EF‖ literature;
+  here 8-bit).  4x fewer bytes on the pod axis — the collective-term
+  lever for multi-pod training (EXPERIMENTS.md §Perf).
+* **ZeRO-1 optimizer-state sharding**: AdamW m/v are sharded over the DP
+  axis along the first divisible dimension — 1/N_dp the optimizer-state
+  HBM at the cost of (already-needed) grad reduce-scatter locality.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def compress_int8(x):
+    """x -> (int8 q, f32 scale); symmetric per-tensor quantization."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def make_error_feedback(params):
+    """Zero residual buffers, one per grad leaf."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_compress_tree(grads, residual):
+    """(grads + residual) -> (quantized tree, new residual)."""
+
+    def one(g, r):
+        g = g.astype(jnp.float32) + r
+        q, s = compress_int8(g)
+        back = decompress_int8(q, s)
+        return (q, s), g - back
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    qs, res = zip(*(one(g, r) for g, r in zip(flat_g, flat_r)))
+    return treedef.unflatten(list(qs)), treedef.unflatten(list(res))
+
+
+def ef_decompress_tree(qtree, dtype=jnp.float32):
+    return jax.tree.map(lambda qs: decompress_int8(qs[0], qs[1], dtype), qtree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def zero1_pspecs(param_pspecs, dp_axis: str, params, axis_size: int = 1):
+    """Shard optimizer state over ``dp_axis`` along the first dim that is
+    unsharded in the param spec and divisible by the axis size.  Falls
+    back to the param's own spec (replication over DP)."""
+
+    def one(spec: P, p):
+        t = tuple(spec) + (None,) * (p.ndim - len(tuple(spec)))
+        used = {a for s in t if s for a in (s if isinstance(s, tuple) else (s,))}
+        if dp_axis in used:
+            return P(*t)
+        for i, s in enumerate(t):
+            if s is None and axis_size > 1 and p.shape[i] % axis_size == 0:
+                lst = list(t)
+                lst[i] = dp_axis
+                return P(*lst)
+        return P(*t)
+
+    return jax.tree.map(one, param_pspecs, params,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,34 @@
+"""Galapagos-analogue runtime: topology, transports, routing.
+
+The paper builds Shoal on top of Galapagos, which provides (a) cluster
+creation/deployment, (b) a swappable network transport (TCP/UDP/raw
+Ethernet), and (c) routing of packets to kernels.  On a TPU pod the
+same three concerns exist and live here:
+
+* :mod:`repro.runtime.topology`  -- cluster/mesh creation (pods x chips),
+  the analogue of Galapagos' cluster description files.
+* :mod:`repro.runtime.transport` -- delivery semantics (acked vs async,
+  packet-size limits) and the per-link-class performance model; the
+  analogue of choosing TCP/UDP in the Galapagos middleware layer.
+* :mod:`repro.runtime.router`    -- kernel-ID <-> mesh-coordinate mapping
+  and link classification (same-chip / intra-pod ICI / inter-pod DCN);
+  the analogue of libGalapagos' router thread.
+"""
+
+from repro.runtime.topology import ClusterSpec, make_mesh, make_cpu_mesh
+from repro.runtime.transport import (Transport, TCP, UDP, LinkClass,
+                                     model_latency_s, model_throughput_Bps)
+from repro.runtime.router import Router
+
+__all__ = [
+    "ClusterSpec",
+    "make_mesh",
+    "make_cpu_mesh",
+    "Transport",
+    "TCP",
+    "UDP",
+    "LinkClass",
+    "model_latency_s",
+    "model_throughput_Bps",
+    "Router",
+]

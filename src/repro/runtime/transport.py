@@ -1,0 +1,102 @@
+"""Transports: the Galapagos middleware-layer analogue.
+
+The paper's middleware lets an application switch between TCP, UDP and
+raw Ethernet without source changes (Sec. II-B2), and its AM layer marks
+messages *asynchronous* to suppress the automatic reply (Sec. III-A).
+On a TPU pod the links are lossless, so the surviving distinction is:
+
+* ``TCP``  -> *acked* delivery: every AM triggers an automatic reply
+  that bumps a credit counter at the source (2 link traversals).
+* ``UDP``  -> *async* delivery: fire-and-forget (1 link traversal).
+
+A transport also carries the maximum packet size.  The paper inherits a
+9000-byte jumbo-frame limit from the hardware TCP core and leaves
+segmentation of larger AMs as future work (footnote 2); we implement
+that segmentation in :mod:`repro.core.ops`, governed by
+``max_packet_bytes`` here.
+
+Finally the transport holds the per-link-class performance model used by
+the latency/throughput microbenchmarks to report TPU-target numbers next
+to the CPU-host measurements (this container has no ICI).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+
+class LinkClass(enum.Enum):
+    """The three placement classes of the paper's six topologies.
+
+    Paper (FPGA cluster)              -> TPU pod
+    same node (internal routing)      -> LOCAL (same chip, no collective)
+    different nodes, HW fast path     -> ICI (intra-pod torus link)
+    different nodes via full stack    -> DCN (inter-pod data-center network)
+    """
+
+    LOCAL = 0
+    ICI = 1
+    DCN = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class Transport:
+    """Delivery semantics + packet limits + link performance model."""
+
+    name: str
+    acked: bool                      # TCP-like auto-reply vs UDP-like async
+    max_packet_bytes: int = 9000     # jumbo frame, as in the paper
+    word_bytes: int = 4              # one Shoal word = one f32/int32
+
+    # Per-link-class latency (s) and bandwidth (B/s) for the analytic
+    # model.  ICI/DCN numbers are TPU-v5e-class; LOCAL models an on-chip
+    # HBM copy.
+    lat_s: tuple[float, float, float] = (0.2e-6, 1.0e-6, 10.0e-6)
+    bw_Bps: tuple[float, float, float] = (819e9, 50e9, 25e9)
+
+    @property
+    def max_packet_words(self) -> int:
+        return self.max_packet_bytes // self.word_bytes
+
+    def hops_per_message(self) -> int:
+        """Link traversals per AM: 1 for the message, +1 for the reply."""
+        return 2 if self.acked else 1
+
+
+TCP = Transport(name="tcp", acked=True)
+UDP = Transport(name="udp", acked=False)
+
+
+def model_latency_s(
+    transport: Transport,
+    link: LinkClass,
+    payload_bytes: int,
+    header_bytes: int = 48,
+    hops: int | None = None,
+) -> float:
+    """Analytic end-to-end latency of one AM (plus reply if acked).
+
+    latency = hops * (link latency + message bytes / link bandwidth)
+    where the reply is a header-only Short AM.
+    """
+    i = link.value
+    lat, bw = transport.lat_s[i], transport.bw_Bps[i]
+    fwd = lat + (header_bytes + payload_bytes) / bw
+    if hops is not None:
+        return hops * fwd
+    if transport.acked:
+        rep = lat + header_bytes / bw
+        return fwd + rep
+    return fwd
+
+
+def model_throughput_Bps(
+    transport: Transport, link: LinkClass, payload_bytes: int, header_bytes: int = 48
+) -> float:
+    """Sustained payload throughput of back-to-back pipelined AMs: the
+    wire carries header+payload, only payload counts as goodput.  Replies
+    flow on the reverse link and do not consume forward bandwidth."""
+    i = link.value
+    eff = transport.bw_Bps[i] * payload_bytes / (payload_bytes + header_bytes)
+    return eff

@@ -1,0 +1,143 @@
+"""Serving engine: batched prefill + decode with slot management.
+
+The decode step is a single compiled program over a fixed batch of
+*lanes*; requests are multiplexed onto free lanes (continuous-batching
+style).  Each lane tracks its own absolute position, so mixed-progress
+lanes decode together in one program — ring caches and the position-
+masked attention make this correct (slots whose ``pos`` is -1 never
+attend).
+
+``serve_step`` (= one ``decode_step`` over the full lane batch) is what
+the ``decode_*`` / ``long_*`` dry-run shapes lower.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (S,) int32
+    max_new: int
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, lanes: int, slots: int,
+                 greedy: bool = True, temperature: float = 1.0, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.lanes = lanes
+        self.slots = slots
+        self.greedy = greedy
+        self.temperature = temperature
+        self.rng = np.random.default_rng(seed)
+
+        self.cache = model.make_cache(lanes, slots)
+        self.pos = np.zeros((lanes,), np.int32)
+        self.last_tok = np.zeros((lanes,), np.int32)
+        self.active: list[Request | None] = [None] * lanes
+        self._decode = jax.jit(model.decode_step)
+        # single-lane prefill (prompts have ragged lengths; each fills its
+        # own lane's cache slice)
+        self._prefill_one = jax.jit(self._prefill_lane)
+
+    # -- lane-granular prefill ------------------------------------------------
+
+    def _prefill_lane(self, params, cache, tokens, lane):
+        """Run a (1, S) prompt and write its cache into lane ``lane``."""
+        lane_cache = jax.tree.map(
+            lambda c: jax.lax.dynamic_slice_in_dim(c, lane, 1, axis=1)
+            if c.ndim >= 2 else c, cache)
+        logits, lane_cache = self.model.prefill(params, {"tokens": tokens},
+                                                lane_cache)
+        cache = jax.tree.map(
+            lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+                full, one.astype(full.dtype), lane, axis=1)
+            if full.ndim >= 2 else one, cache, lane_cache)
+        return logits, cache
+
+    # -- scheduling -------------------------------------------------------------
+
+    def _reset_lane(self, lane: int):
+        """Clear a lane's cache before reuse: position slots to -1 (so the
+        masked attention ignores them), recurrent states to their inits."""
+
+        def reset(path, c):
+            if c.ndim < 2:
+                return c
+            name = str(getattr(path[-1], "key", path[-1]))
+            lane_shape = c.shape[:1] + (1,) + c.shape[2:]
+            if name == "pos":
+                fresh = -jnp.ones(lane_shape, c.dtype)
+            elif name == "m":
+                fresh = jnp.full(lane_shape, -30.0, c.dtype)
+            else:
+                fresh = jnp.zeros(lane_shape, c.dtype)
+            return jax.lax.dynamic_update_slice_in_dim(c, fresh, lane, axis=1)
+
+        self.cache = jax.tree_util.tree_map_with_path(reset, self.cache)
+
+    def submit(self, req: Request) -> bool:
+        """Place a request on a free lane (prefill now).  False if full."""
+        for lane, cur in enumerate(self.active):
+            if cur is None:
+                self._reset_lane(lane)
+                self.active[lane] = req
+                toks = jnp.asarray(req.prompt, jnp.int32)[None]
+                logits, self.cache = self._prefill_one(
+                    self.params, self.cache, toks, lane)
+                tok = self._sample(np.asarray(logits)[0])
+                req.out.append(int(tok))
+                self.pos[lane] = len(req.prompt)
+                self.last_tok[lane] = tok
+                return True
+        return False
+
+    def _sample(self, logits: np.ndarray) -> int:
+        if self.greedy:
+            return int(np.argmax(logits))
+        p = np.exp((logits - logits.max()) / self.temperature)
+        p /= p.sum()
+        return int(self.rng.choice(len(p), p=p))
+
+    def step(self):
+        """One decode step for all active lanes."""
+        if not any(r is not None and not r.done for r in self.active):
+            return
+        toks = jnp.asarray(self.last_tok, jnp.int32)[:, None]
+        pos = jnp.asarray(self.pos, jnp.int32)
+        logits, self.cache = self._decode(self.params, self.cache, toks, pos)
+        logits = np.asarray(logits, np.float32)
+        for lane, req in enumerate(self.active):
+            if req is None or req.done:
+                continue
+            tok = self._sample(logits[lane])
+            req.out.append(tok)
+            self.pos[lane] += 1
+            self.last_tok[lane] = tok
+            if len(req.out) >= req.max_new:
+                req.done = True
+                self.active[lane] = None
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        """Serve a request list to completion (simple FCFS scheduler)."""
+        pending = list(requests)
+        done: list[Request] = []
+        while pending or any(r is not None for r in self.active):
+            while pending and self.submit(pending[0]):
+                pending.pop(0)
+            self.step()
+            for r in requests:
+                if r.done and r not in done:
+                    done.append(r)
+        return done

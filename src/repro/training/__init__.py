@@ -1,0 +1,3 @@
+from repro.training.train import TrainState, Trainer, TrainerConfig
+
+__all__ = ["TrainState", "Trainer", "TrainerConfig"]

@@ -1,0 +1,55 @@
+"""Fault tolerance at step granularity: straggler quorum, elastic restart.
+
+At 1000+ nodes the failure model is: (a) a host dies mid-run — handled
+by checkpoint/restart with the data-pipeline step inside the checkpoint
+(:mod:`repro.checkpoint`) plus the launcher retry loop
+(:mod:`repro.launch.train`); (b) a host is *slow* (straggler) — handled
+within-step by compute/comm overlap (bucketed grads, latency-hiding
+scheduler) and across steps by **quorum DP**: the step proceeds with
+whichever DP ranks contributed, reweighting the mean by the live count.
+On a real deployment the live mask comes from the coordination service
+heartbeat; here it is an input, which also makes the policy unit-testable
+and lets tests inject failures deterministically.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quorum_mean_grads(grads, live: jnp.ndarray, axes):
+    """Mean-of-live gradient reduction (inside shard_map over ``axes``).
+
+    ``live``: () float {0,1} for this DP rank.  Dead ranks contribute
+    zero; the sum is renormalized by the live count, so the update
+    equals the mean over surviving ranks (drop-straggler semantics).
+    """
+    n_live = jax.lax.psum(live, axes)
+
+    def one(g):
+        g = g.astype(jnp.float32) * live
+        return (jax.lax.psum(g, axes) / jnp.maximum(n_live, 1.0)).astype(g.dtype)
+
+    return jax.tree.map(one, grads), n_live
+
+
+def reshard_state(state, shardings):
+    """Elastic restart onto a different mesh: device_put every leaf to its
+    new sharding (checkpoints store global arrays, so this is total)."""
+    return jax.tree.map(jax.device_put, state, shardings,
+                        is_leaf=lambda x: x is None)
+
+
+class FailureInjector:
+    """Deterministic failure schedule for tests/examples: fail the step
+    the first time each listed step number is reached."""
+
+    def __init__(self, fail_at: set[int]):
+        self.fail_at = set(fail_at)
+        self.fired: set[int] = set()
+
+    def check(self, step: int):
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected failure at step {step}")

@@ -1,0 +1,436 @@
+"""Multi-device semantic checks for the Shoal library, the trainer
+backends, and elastic restart.  Run by tests/test_multidevice.py in a
+subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8.
+"""
+
+import os
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import collectives as coll
+from repro.core import handlers as hd
+from repro.core import humboldt, ops
+from repro.core.address_space import GlobalAddressSpace
+from repro.core.state import ShoalContext
+from repro.runtime import TCP, UDP, make_cpu_mesh
+
+N = 8
+RING = [(i, (i + 1) % N) for i in range(N)]
+
+
+def check(name):
+    print(f"[md] {name}", flush=True)
+
+
+def test_put_long_ring():
+    check("put_long ring + wait_replies + barrier")
+    mesh = make_cpu_mesh(N, ("kernel",))
+    ctx = ShoalContext(mesh=mesh, axes=("kernel",), transport=TCP,
+                       segment_words=64)
+    gas = GlobalAddressSpace(ctx)
+
+    def prog(st):
+        me = ctx.my_id()
+        pay = (jnp.arange(4, dtype=jnp.float32) + 1) * (me + 1).astype(jnp.float32)
+        st = ops.put_long(ctx, st, pay, RING, dst_addr=10, token=1)
+        st = ops.wait_replies(ctx, st, token=1, n=1)
+        st = ops.barrier(ctx, st)
+        return st
+
+    st = jax.jit(gas.spmd(prog))(gas.make_global_state())
+    seg = np.asarray(st.segment)
+    for k in range(N):
+        src = (k - 1) % N
+        np.testing.assert_allclose(seg[k, 10:14], (np.arange(4) + 1) * (src + 1))
+    assert (np.asarray(st.error) == 0).all()
+    assert (np.asarray(st.barrier_epoch) == 1).all()
+    assert (np.asarray(st.credits) == 0).all()     # drained
+
+
+def test_accumulate_and_get():
+    check("put_long H_ADD + get_medium + get_long")
+    mesh = make_cpu_mesh(N, ("kernel",))
+    ctx = ShoalContext(mesh=mesh, axes=("kernel",), transport=TCP,
+                       segment_words=64)
+    gas = GlobalAddressSpace(ctx)
+
+    def prog(st):
+        me = ctx.my_id()
+        st = ops.put_long(ctx, st, jnp.ones(2, jnp.float32) * (me + 1).astype(jnp.float32),
+                          RING, dst_addr=0, handler=hd.H_ADD, token=1)
+        st = ops.put_long(ctx, st, jnp.ones(2, jnp.float32), RING, dst_addr=0,
+                          handler=hd.H_ADD, token=1)
+        st = ops.wait_replies(ctx, st, token=1, n=2)
+        # fetch my successor's segment[0:2]
+        st, data = ops.get_medium(ctx, st, RING, src_addr=0, nwords=2, token=2)
+        st = ops.wait_replies(ctx, st, token=2, n=1)
+        seg = jax.lax.dynamic_update_slice(st.segment, data, (30,))
+        from repro.core.gascore import dataclasses_replace
+        st = dataclasses_replace(st, segment=seg)
+        # one-sided read into local segment at 40
+        st = ops.get_long(ctx, st, RING, src_addr=0, nwords=2, dst_addr=40,
+                          token=3)
+        st = ops.wait_replies(ctx, st, token=3, n=1)
+        return st
+
+    st = jax.jit(gas.spmd(prog))(gas.make_global_state())
+    seg = np.asarray(st.segment)
+    for k in range(N):
+        src = (k - 1) % N
+        expect = src + 2.0
+        np.testing.assert_allclose(seg[k, 0:2], expect)      # accumulated
+        succ = (k + 1) % N
+        np.testing.assert_allclose(seg[k, 30:32], k + 2.0)   # what succ holds
+        np.testing.assert_allclose(seg[k, 40:42], k + 2.0)
+    assert (np.asarray(st.error) == 0).all()
+
+
+def test_strided_vectored():
+    check("put_long_strided + put_long_vectored")
+    mesh = make_cpu_mesh(N, ("kernel",))
+    ctx = ShoalContext(mesh=mesh, axes=("kernel",), transport=TCP,
+                       segment_words=128)
+    gas = GlobalAddressSpace(ctx)
+
+    def prog(st):
+        me1 = (ctx.my_id() + 1).astype(jnp.float32)
+        pay = jnp.arange(6, dtype=jnp.float32) + 10 * me1
+        st = ops.put_long_strided(ctx, st, pay, RING, dst_addr=4, stride=10,
+                                  blk_words=2, nblocks=3, token=1)
+        st = ops.put_long_vectored(ctx, st,
+                                   [jnp.full(2, me1), jnp.full(3, -me1)],
+                                   RING, dst_addrs=[50, 60], token=2)
+        st = ops.wait_replies(ctx, st, token=1, n=1)
+        st = ops.wait_replies(ctx, st, token=2, n=1)
+        return st
+
+    st = jax.jit(gas.spmd(prog))(gas.make_global_state())
+    seg = np.asarray(st.segment)
+    for k in range(N):
+        src1 = ((k - 1) % N) + 1
+        base = np.arange(6) + 10 * src1
+        np.testing.assert_allclose(seg[k, 4:6], base[0:2])
+        np.testing.assert_allclose(seg[k, 14:16], base[2:4])
+        np.testing.assert_allclose(seg[k, 24:26], base[4:6])
+        np.testing.assert_allclose(seg[k, 50:52], src1)
+        np.testing.assert_allclose(seg[k, 60:63], -src1)
+    assert (np.asarray(st.error) == 0).all()
+
+
+def test_mtu_segmentation():
+    check(">MTU segmentation (the paper's jumbo-frame limit, implemented)")
+    mesh = make_cpu_mesh(N, ("kernel",))
+    import dataclasses
+    tiny_tcp = dataclasses.replace(TCP, max_packet_bytes=64)   # 16 words
+    ctx = ShoalContext(mesh=mesh, axes=("kernel",), transport=tiny_tcp,
+                       segment_words=128)
+    gas = GlobalAddressSpace(ctx)
+
+    def prog(st):
+        me1 = (ctx.my_id() + 1).astype(jnp.float32)
+        pay = jnp.arange(50, dtype=jnp.float32) + 100 * me1
+        st = ops.put_long(ctx, st, pay, RING, dst_addr=8, token=1)
+        # 50 words / 16-word packets -> 4 packets -> 4 replies
+        st = ops.wait_replies(ctx, st, token=1, n=4)
+        return st
+
+    st = jax.jit(gas.spmd(prog))(gas.make_global_state())
+    seg = np.asarray(st.segment)
+    for k in range(N):
+        src1 = ((k - 1) % N) + 1
+        np.testing.assert_allclose(seg[k, 8:58], np.arange(50) + 100 * src1)
+    assert (np.asarray(st.error) == 0).all(), "expected exactly 4 replies"
+
+
+def test_async_udp_semantics():
+    check("async (UDP) suppresses replies; wait flags underflow")
+    mesh = make_cpu_mesh(N, ("kernel",))
+    ctx = ShoalContext(mesh=mesh, axes=("kernel",), transport=UDP,
+                       segment_words=32)
+    gas = GlobalAddressSpace(ctx)
+
+    def prog(st):
+        st = ops.put_long(ctx, st, jnp.ones(2, jnp.float32), RING,
+                          dst_addr=0, token=1)
+        st = ops.wait_replies(ctx, st, token=1, n=1)
+        return st
+
+    st = jax.jit(gas.spmd(prog))(gas.make_global_state())
+    assert (np.asarray(st.error) == 1).all()
+    np.testing.assert_allclose(np.asarray(st.segment)[:, 0:2], 1.0)
+
+
+def test_humboldt_two_sided():
+    check("HUMboldt 4-phase send/recv")
+    mesh = make_cpu_mesh(N, ("kernel",))
+    ctx = ShoalContext(mesh=mesh, axes=("kernel",), transport=TCP,
+                       segment_words=32)
+    gas = GlobalAddressSpace(ctx)
+
+    def prog(st):
+        me1 = (ctx.my_id() + 1).astype(jnp.float32)
+        st, recv = humboldt.sendrecv(ctx, st, me1 * jnp.ones(3), RING, token=4)
+        from repro.core.gascore import dataclasses_replace
+        st = dataclasses_replace(
+            st, segment=jax.lax.dynamic_update_slice(st.segment, recv, (4,)))
+        st = ops.wait_replies(ctx, st, token=4, n=1)
+        return st
+
+    st = jax.jit(gas.spmd(prog))(gas.make_global_state())
+    seg = np.asarray(st.segment)
+    for k in range(N):
+        np.testing.assert_allclose(seg[k, 4:7], ((k - 1) % N) + 1)
+    assert (np.asarray(st.error) == 0).all()
+
+
+def test_ring_collectives():
+    check("ring collectives vs lax references")
+    mesh = make_cpu_mesh(N, ("kernel",))
+    xs = jnp.asarray(np.random.default_rng(0).standard_normal((N, 37)),
+                     jnp.float32)
+
+    def ar(x):
+        return coll.ring_all_reduce(x, ("kernel",), N)
+
+    out = jax.jit(jax.shard_map(ar, mesh=mesh, in_specs=P("kernel"),
+                                out_specs=P("kernel")))(xs)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.tile(np.asarray(xs).sum(0), (N, 1)),
+                               rtol=1e-5)
+
+    def rs(x):
+        return coll.ring_reduce_scatter(x, ("kernel",), N)
+
+    xs2 = jnp.asarray(np.random.default_rng(1).standard_normal((N, 40)),
+                      jnp.float32)
+    out = jax.jit(jax.shard_map(rs, mesh=mesh, in_specs=P("kernel"),
+                                out_specs=P("kernel")))(xs2)
+    np.testing.assert_allclose(np.asarray(out).reshape(N, 5),
+                               np.asarray(xs2).sum(0).reshape(N, 5), rtol=1e-5)
+
+    def bc(x):
+        return coll.broadcast_from(x, ("kernel",), N, root=5)
+
+    out = jax.jit(jax.shard_map(bc, mesh=mesh, in_specs=P("kernel"),
+                                out_specs=P("kernel")))(xs)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.tile(np.asarray(xs)[5], (N, 1)))
+
+
+def test_trainer_backends_agree():
+    check("xla vs shoal trainer backends + int8 EF + quorum")
+    from repro.models.model import ModelConfig, build_model
+    from repro.optim.adamw import AdamWConfig
+    from repro.training.train import Trainer, TrainerConfig
+    from repro.data.pipeline import DataConfig, TokenPipeline
+
+    mesh = make_cpu_mesh(N, ("kernel",))
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+                      dtype=jnp.float32)
+    batch, _ = TokenPipeline(DataConfig(vocab=256, batch=8, seq=32,
+                                        seed=1)).next_batch(0)
+    b = {k: jax.device_put(v, NamedSharding(mesh, P(("data",))))
+         for k, v in batch.items()}
+
+    m1 = build_model(cfg, mesh=mesh, dp_axes=("data",))
+    tr1 = Trainer(m1, AdamWConfig(lr=1e-3), TrainerConfig(donate=False))
+    st1 = tr1.init_state(jax.random.PRNGKey(0))
+    s1, met1 = tr1.make_train_step()(st1, b)
+
+    m2 = build_model(cfg, mesh=mesh, dp_axes=())
+    tr2 = Trainer(m2, AdamWConfig(lr=1e-3),
+                  TrainerConfig(comm_backend="shoal", donate=False),
+                  dp_axes=("data",))
+    st2 = tr2.init_state(jax.random.PRNGKey(0))
+    s2, met2 = tr2.make_train_step()(st2, b)
+    assert abs(float(met1["loss"]) - float(met2["loss"])) < 1e-4
+    deltas = jax.tree.map(lambda a, c: float(jnp.max(jnp.abs(a - c))),
+                          s1.params, s2.params)
+    assert max(jax.tree.leaves(deltas)) < 1e-4
+
+    tr3 = Trainer(m2, AdamWConfig(lr=1e-3),
+                  TrainerConfig(comm_backend="shoal", grad_compression=True,
+                                donate=False), dp_axes=("data",))
+    st3 = tr3.init_state(jax.random.PRNGKey(0))
+    s3, met3 = tr3.make_train_step()(st3, b)
+    deltas3 = jax.tree.map(lambda a, c: float(jnp.max(jnp.abs(a - c))),
+                           s1.params, s3.params)
+    assert max(jax.tree.leaves(deltas3)) < 5e-2   # int8 quantization error
+
+    # quorum DP: dropping one rank = mean over survivors
+    from repro.training.elastic import quorum_mean_grads
+    def qfn(g, live):
+        out, n_live = quorum_mean_grads({"g": g}, live, ("data",))
+        return out["g"], n_live
+    g = jnp.asarray(np.arange(2 * 3, dtype=np.float32).reshape(2, 3))
+    live = jnp.asarray([1.0, 0.0])
+    out, n_live = jax.jit(jax.shard_map(
+        qfn, mesh=mesh, in_specs=(P("data"), P("data")),
+        out_specs=(P("data"), P("data", None)) if False else (P("data"), P("data"))))(g, live)
+    np.testing.assert_allclose(np.asarray(out)[0], np.asarray(g)[0])
+    assert float(np.asarray(n_live)[0]) == 1.0
+
+
+def test_elastic_reshard():
+    check("checkpoint save on 8-way mesh, restore on 4-way mesh")
+    from repro.checkpoint import CheckpointManager
+    mesh8 = jax.make_mesh((8,), ("data",),
+                          axis_types=(jax.sharding.AxisType.Auto,))
+    x = jnp.arange(64.0).reshape(8, 8)
+    xs = jax.device_put(x, NamedSharding(mesh8, P("data", None)))
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(7, {"w": xs}, extras={"data_step": 123})
+        devs = jax.devices()[:4]
+        mesh4 = jax.sharding.Mesh(np.asarray(devs).reshape(4), ("data",))
+        tree, extras = mgr.restore(
+            {"w": x}, shardings={"w": NamedSharding(mesh4, P("data", None))},
+            verify=True)
+        assert extras["data_step"] == 123
+        np.testing.assert_array_equal(np.asarray(tree["w"]), np.asarray(x))
+        assert len(tree["w"].sharding.device_set) == 4
+
+
+def test_ring_attention_exact():
+    check("ring attention (seq-parallel, one-sided-put KV rotation)")
+    from repro.models.ring_attention import ring_attention
+    from repro.models.attention import _attend
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rng = np.random.default_rng(0)
+    B, S, K, G, dh = 2, 64, 2, 3, 16
+    q = jnp.asarray(rng.standard_normal((B, S, K, G, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, K, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, K, dh)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S)).astype(jnp.int32)
+    out = jax.jit(lambda *a: ring_attention(mesh, "model", ("data",), *a))(
+        q, k, v, pos)
+    want = _attend(q, k, v, pos, pos, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_seq_shard_model_exact():
+    check("seq_shard (ring) model forward+grad vs baseline")
+    import dataclasses
+    from repro.models.model import ModelConfig, build_model
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
+                      dtype=jnp.float32, tp=False, seq_shard=True)
+    m1 = build_model(cfg, mesh=mesh, dp_axes=("data",))
+    m2 = build_model(dataclasses.replace(cfg, seq_shard=False))
+    params = m2.init(jax.random.PRNGKey(0))
+    toks = jnp.asarray(np.random.default_rng(0).integers(0, 128, (2, 32)),
+                       jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    l1 = jax.jit(m1.loss)(params, batch)
+    l2 = jax.jit(m2.loss)(params, batch)
+    assert abs(float(l1) - float(l2)) < 1e-4
+    g1 = jax.jit(jax.grad(m1.loss))(params, batch)
+    g2 = jax.jit(jax.grad(m2.loss))(params, batch)
+    d = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), g1, g2)))
+    assert d < 1e-4, d
+
+
+def test_moe_dispatch_variants_exact():
+    check("EP island dispatch variants (psum/rs/a2a) vs oracle")
+    import dataclasses
+    from repro.models.model import ModelConfig, build_model
+    from repro.models.moe import MoEDims
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    base = MoEDims(n_experts=8, top_k=2, d_ff_expert=64, n_shared=1,
+                   capacity_factor=16.0)
+    toks = jnp.asarray(np.random.default_rng(0).integers(0, 128, (4, 32)),
+                       jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    cfg0 = ModelConfig(name="tm", family="moe", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=4, d_ff=128, vocab=128,
+                       fsdp=True, aux_loss_weight=0.0, moe=base,
+                       dtype=jnp.float32)
+    oracle = build_model(dataclasses.replace(cfg0, fsdp=False))
+    params = oracle.init(jax.random.PRNGKey(1))
+    l_ref = float(jax.jit(oracle.loss)(params, batch))
+    for dispatch, seq in (("psum", False), ("rs", True), ("a2a", True)):
+        cfg = dataclasses.replace(
+            cfg0, seq_shard=seq,
+            moe=dataclasses.replace(base, dispatch=dispatch))
+        m = build_model(cfg, mesh=mesh, dp_axes=("data",))
+        l = float(jax.jit(m.loss)(params, batch))
+        assert abs(l - l_ref) < 5e-5, (dispatch, l, l_ref)
+
+
+def test_gascore_rdma_ring():
+    check("Pallas RDMA ring all-reduce (the literal GAScore) vs psum")
+    from repro.kernels.gascore_dma import ring_allreduce_dma
+    mesh = jax.make_mesh((8,), ("x",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    for chunk, dt, tol in [(128, jnp.float32, 1e-5), (64, jnp.bfloat16, 5e-2)]:
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(8 * chunk),
+                        dt)
+        got = np.asarray(ring_allreduce_dma(mesh, "x", x),
+                         np.float32).reshape(8, chunk)
+        want = np.asarray(x, np.float32).reshape(8, chunk).sum(0)
+        for r in range(8):
+            np.testing.assert_allclose(got[r], want, rtol=tol, atol=tol)
+
+
+def test_pipeline_parallel():
+    check("2-stage pipeline over the pod axis (Medium-AM handoffs)")
+    from repro.training.pipeline import pipeline_apply, split_stages
+    mesh = jax.make_mesh((2, 4), ("pod", "chip"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rng = np.random.default_rng(0)
+    L, d = 4, 16
+    w = jnp.asarray(rng.standard_normal((L, d, d)) * 0.3, jnp.float32)
+
+    def stage_fn(pslice, x):          # pslice: (L/2, d, d)
+        def body(x, wl):
+            return jnp.tanh(x @ wl), ()
+        x, _ = jax.lax.scan(body, x, pslice["w"])
+        return x
+
+    M, mb = 3, 5
+    xs = jnp.asarray(rng.standard_normal((M, mb, d)), jnp.float32)
+    out = jax.jit(lambda p, x: pipeline_apply(
+        mesh, "pod", stage_fn, p, x))(split_stages({"w": w}, 2), xs)
+
+    # sequential reference
+    ref = xs
+    for l in range(L):
+        ref = jnp.tanh(ref @ w[l])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def main():
+    test_put_long_ring()
+    test_accumulate_and_get()
+    test_strided_vectored()
+    test_mtu_segmentation()
+    test_async_udp_semantics()
+    test_humboldt_two_sided()
+    test_ring_collectives()
+    test_trainer_backends_agree()
+    test_elastic_reshard()
+    test_ring_attention_exact()
+    test_seq_shard_model_exact()
+    test_moe_dispatch_variants_exact()
+    test_gascore_rdma_ring()
+    test_pipeline_parallel()
+    print("MD_CHECKS_ALL_PASS")
+
+
+if __name__ == "__main__":
+    main()

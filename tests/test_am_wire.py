@@ -1,0 +1,68 @@
+"""Property tests for the AM wire format (paper Sec. III-A)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import am
+
+field_vals = st.integers(min_value=0, max_value=2**20)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    msg_class=st.sampled_from([am.NOP, am.SHORT, am.MEDIUM, am.LONG]),
+    src=field_vals, dst=field_vals, nwords=field_vals,
+    dst_addr=field_vals, src_addr=field_vals,
+    handler=st.integers(0, 31), token=st.integers(0, 15),
+    asynchronous=st.booleans(), get=st.booleans(), fifo=st.booleans(),
+    strided=st.booleans(), vectored=st.booleans(), reply=st.booleans(),
+)
+def test_encode_decode_roundtrip(msg_class, src, dst, nwords, dst_addr,
+                                 src_addr, handler, token, asynchronous,
+                                 get, fifo, strided, vectored, reply):
+    t = am.make_type(msg_class, asynchronous=asynchronous, get=get,
+                     fifo=fifo, strided=strided, vectored=vectored,
+                     reply=reply)
+    hdr = am.encode(type=t, src=src, dst=dst, nwords=nwords,
+                    dst_addr=dst_addr, src_addr=src_addr, handler=handler,
+                    token=token)
+    h = am.decode(hdr)
+    assert int(h.msg_class) == msg_class
+    assert int(h.src) == src and int(h.dst) == dst
+    assert int(h.nwords) == nwords
+    assert int(h.dst_addr) == dst_addr and int(h.src_addr) == src_addr
+    assert int(h.handler) == handler and int(h.token) == token
+    assert bool(h.flag(am.FLAG_ASYNC)) == asynchronous
+    assert bool(h.flag(am.FLAG_GET)) == get
+    assert bool(h.flag(am.FLAG_FIFO)) == fifo
+    assert bool(h.flag(am.FLAG_STRIDED)) == strided
+    assert bool(h.flag(am.FLAG_VECTORED)) == vectored
+    assert bool(h.flag(am.FLAG_REPLY)) == reply
+
+
+def test_zero_header_is_nop():
+    h = am.decode(jnp.zeros((am.HDR_WORDS,), jnp.int32))
+    assert bool(am.is_nop(h))
+    assert not bool(h.flag(am.FLAG_ASYNC))
+
+
+def test_reply_for_targets_source():
+    hdr = am.encode(type=am.make_type(am.LONG), src=3, dst=7, token=5)
+    rep = am.decode(am.reply_for(am.decode(hdr)))
+    assert int(rep.src) == 7 and int(rep.dst) == 3
+    assert int(rep.token) == 5
+    assert bool(rep.flag(am.FLAG_REPLY))
+    assert bool(rep.flag(am.FLAG_ASYNC))  # replies must not trigger replies
+
+
+def test_unknown_field_rejected():
+    with pytest.raises(ValueError):
+        am.encode(bogus=1)
+
+
+def test_header_width():
+    hdr = am.encode(type=am.make_type(am.SHORT))
+    assert hdr.shape == (am.HDR_WORDS,)
+    assert hdr.dtype == jnp.int32

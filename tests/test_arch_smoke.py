@@ -1,0 +1,189 @@
+"""Per-assigned-architecture smoke tests: a REDUCED config of the same
+family runs one forward + one train step + a decode step on CPU, with
+shape and finiteness assertions (the FULL configs are exercised only by
+the dry-run)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models.model import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.training.train import Trainer, TrainerConfig
+
+ARCHS = [a.replace("_", "-") for a in configs.ARCH_IDS]
+
+
+def make_batch(cfg, B=2, S=16, rng=None):
+    rng = rng or np.random.default_rng(0)
+    batch = {"labels": jnp.asarray(
+        rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+    if cfg.frontend == "embeddings":
+        batch["embeddings"] = jnp.asarray(
+            rng.standard_normal((B, S, cfg.d_model)) * 0.05, jnp.float32)
+    else:
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    if cfg.family == "vlm":
+        batch["image_feats"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_image_tokens, cfg.d_model)) * 0.05,
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_forward_and_train_step(arch):
+    cfg = configs.reduced(arch)
+    model = build_model(cfg)
+    B, S = 2, 16
+    batch = make_batch(cfg, B, S)
+
+    logits, aux = jax.jit(model.forward_train)(model.init(jax.random.PRNGKey(0)), batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), "NaN/Inf logits"
+
+    trainer = Trainer(model, AdamWConfig(lr=1e-3), TrainerConfig(donate=False))
+    state = trainer.init_state(jax.random.PRNGKey(1))
+    step = trainer.make_train_step()
+    state2, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert int(state2.step) == 1
+    # params actually changed
+    delta = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), state.params,
+        state2.params)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_decode_step(arch):
+    cfg = configs.reduced(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 8
+    batch = make_batch(cfg, B, S)
+    batch.pop("labels")
+    cache = model.make_cache(B, slots=32)
+    logits, cache = jax.jit(model.prefill)(params, batch, cache)
+    assert logits.shape == (B, cfg.vocab)
+    tok = (jnp.zeros((B, 1), jnp.int32) if cfg.frontend == "tokens"
+           else jnp.ones((B, 1, cfg.d_model), jnp.float32) * 0.05)
+    imf = batch.get("image_feats")
+    logits2, cache = jax.jit(model.decode_step)(
+        params, cache, tok, jnp.full((B,), S, jnp.int32), imf)
+    assert logits2.shape == (B, cfg.vocab)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+
+
+def test_full_configs_match_assignment():
+    """The full configs carry the exact assigned hyperparameters."""
+    spec = {
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "deepseek-v2-236b": (60, 5120, 128, 128, 12288, 102400),
+        "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+        "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+        "deepseek-7b": (30, 4096, 32, 32, 11008, 102400),
+        "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+        "llama-3.2-vision-90b": (100, 8192, 64, 8, 28672, 128256),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+    }
+    for arch, (L, d, H, kv, ff, V) in spec.items():
+        cfg = configs.full(arch)
+        assert cfg.n_layers == L, arch
+        assert cfg.d_model == d, arch
+        assert cfg.n_heads == H, arch
+        assert cfg.n_kv_heads == kv, arch
+        assert cfg.d_ff == ff, arch
+        assert cfg.vocab == V, arch
+    # family-specific details
+    ds = configs.full("deepseek-v2-236b")
+    assert ds.mla.kv_lora == 512 and ds.moe.n_experts == 160
+    assert ds.moe.top_k == 6 and ds.moe.n_shared == 2
+    dbrx = configs.full("dbrx-132b")
+    assert dbrx.moe.n_experts == 16 and dbrx.moe.top_k == 4
+    rg = configs.full("recurrentgemma-2b")
+    assert rg.window == 2048 and rg.sub_quadratic
+    xl = configs.full("xlstm-350m")
+    assert xl.slstm_every == 8 and xl.sub_quadratic
+    q = configs.full("qwen2-1.5b")
+    assert q.qkv_bias and q.tie_embeddings
+
+
+def test_long_500k_applicability():
+    from repro.configs.shapes import applicable
+    for arch in ARCHS:
+        cfg = configs.full(arch)
+        expect = arch in ("recurrentgemma-2b", "xlstm-350m")
+        assert applicable(cfg, "long_500k") == expect, arch
+        assert applicable(cfg, "train_4k")
+
+
+def test_prefill_decode_consistency():
+    """Decoding token-by-token must reproduce the teacher-forced forward
+    logits — the strongest cache-correctness check."""
+    cfg = configs.reduced("tinyllama-1.1b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    B, S = 1, 12
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    fwd_logits, _ = jax.jit(model.forward_train)(params, {"tokens": toks})
+
+    cache = model.make_cache(B, slots=32)
+    # prefill the first 4 tokens, then decode the rest one at a time
+    p = 4
+    lg, cache = jax.jit(model.prefill)(params, {"tokens": toks[:, :p]}, cache)
+    np.testing.assert_allclose(np.asarray(lg, np.float32),
+                               np.asarray(fwd_logits[:, p - 1], np.float32),
+                               rtol=2e-3, atol=2e-3)
+    dec = jax.jit(model.decode_step)
+    for t in range(p, S):
+        lg, cache = dec(params, cache, toks[:, t:t + 1],
+                        jnp.full((B,), t, jnp.int32))
+        np.testing.assert_allclose(np.asarray(lg, np.float32),
+                                   np.asarray(fwd_logits[:, t], np.float32),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_prefill_decode_consistency_hybrid():
+    """Same for recurrentgemma (RG-LRU state + windowed ring cache)."""
+    cfg = configs.reduced("recurrentgemma-2b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(4)
+    B, S = 1, 10
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    fwd_logits, _ = jax.jit(model.forward_train)(params, {"tokens": toks})
+    cache = model.make_cache(B, slots=cfg.window)
+    lg, cache = jax.jit(model.prefill)(params, {"tokens": toks[:, :3]}, cache)
+    dec = jax.jit(model.decode_step)
+    for t in range(3, S):
+        lg, cache = dec(params, cache, toks[:, t:t + 1],
+                        jnp.full((B,), t, jnp.int32))
+        np.testing.assert_allclose(np.asarray(lg, np.float32),
+                                   np.asarray(fwd_logits[:, t], np.float32),
+                                   rtol=5e-3, atol=5e-3)
+
+
+def test_prefill_decode_consistency_xlstm():
+    cfg = configs.reduced("xlstm-350m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    B, S = 1, 9
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    fwd_logits, _ = jax.jit(model.forward_train)(params, {"tokens": toks})
+    cache = model.make_cache(B, slots=16)
+    lg, cache = jax.jit(model.prefill)(params, {"tokens": toks[:, :3]}, cache)
+    dec = jax.jit(model.decode_step)
+    for t in range(3, S):
+        lg, cache = dec(params, cache, toks[:, t:t + 1],
+                        jnp.full((B,), t, jnp.int32))
+        np.testing.assert_allclose(np.asarray(lg, np.float32),
+                                   np.asarray(fwd_logits[:, t], np.float32),
+                                   rtol=5e-3, atol=5e-3)

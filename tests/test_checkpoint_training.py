@@ -1,0 +1,141 @@
+"""Checkpoint/restart + fault-tolerant training-loop integration."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models.model import ModelConfig, build_model
+from repro.optim.adamw import AdamWConfig
+from repro.training.elastic import FailureInjector
+from repro.training.train import Trainer, TrainerConfig
+
+TINY = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                   n_heads=2, n_kv_heads=2, d_ff=64, vocab=128,
+                   dtype=jnp.float32)
+
+
+def test_save_restore_bitwise():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        tree = {"a": jnp.arange(12.0).reshape(3, 4),
+                "b": {"c": jnp.asarray([1, 2, 3], jnp.int32)}}
+        mgr.save(5, tree, extras={"data_step": 5})
+        out, extras = mgr.restore(tree, verify=True)
+        assert extras["data_step"] == 5
+        np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+        np.testing.assert_array_equal(np.asarray(out["b"]["c"]),
+                                      np.asarray(tree["b"]["c"]))
+
+
+def test_async_save_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        for s in range(5):
+            mgr.save_async(s, {"x": jnp.full((4,), float(s))})
+        mgr.wait()
+        assert mgr.all_steps() == [3, 4]
+        out, _ = mgr.restore({"x": jnp.zeros(4)})
+        np.testing.assert_array_equal(np.asarray(out["x"]), 4.0)
+
+
+def test_atomic_no_partial_checkpoints():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(1, {"x": jnp.ones(3)})
+        # a stale tmp dir from a crashed save must not be listed
+        os.makedirs(os.path.join(d, "step_00000099.tmp"))
+        assert mgr.all_steps() == [1]
+
+
+def _run_steps(trainer, state, pipe, dstep, n, injector=None, mgr=None,
+               ckpt_every=0, losses=None):
+    step_fn = trainer.make_train_step()
+    losses = [] if losses is None else losses   # survives injected failures
+    s = state
+    while int(s.step) < n:
+        cur = int(s.step)
+        if injector:
+            injector.check(cur)
+        batch, dstep = pipe.next_batch(dstep)
+        s, m = step_fn(s, batch)
+        losses.append(float(m["loss"]))
+        if mgr and ckpt_every and int(s.step) % ckpt_every == 0:
+            mgr.save(int(s.step), s, extras={"data_step": dstep})
+    return s, dstep, losses
+
+
+def test_failure_restart_resumes_identically():
+    """Train 6 steps straight vs train-with-crash-at-4 + restore: the
+    loss trajectories and final params must match bitwise-ish (f32)."""
+    pipe = TokenPipeline(DataConfig(vocab=128, batch=4, seq=16, seed=9))
+    model = build_model(TINY)
+    trainer = Trainer(model, AdamWConfig(lr=1e-3), TrainerConfig(donate=False))
+
+    # uninterrupted reference
+    s0 = trainer.init_state(jax.random.PRNGKey(0))
+    ref_state, _, ref_losses = _run_steps(trainer, s0, pipe, 0, 6)
+
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        inj = FailureInjector({4})
+        s = trainer.init_state(jax.random.PRNGKey(0))
+        dstep = 0
+        losses = []
+        try:
+            _run_steps(trainer, s, pipe, dstep, 6, injector=inj, mgr=mgr,
+                       ckpt_every=2, losses=losses)
+            raise AssertionError("injected failure did not fire")
+        except RuntimeError:
+            pass  # "node failure"
+        # launcher-style recovery: restore last good checkpoint + data state
+        like = trainer.init_state(jax.random.PRNGKey(0))
+        s, extras = mgr.restore(like)
+        dstep = extras["data_step"]
+        assert int(s.step) == 4 and dstep == 4
+        s, dstep, more = _run_steps(trainer, s, pipe, dstep, 6)
+        losses = losses[:4] + more
+
+    assert len(losses) == 6
+    np.testing.assert_allclose(losses, ref_losses, rtol=1e-6)
+    deltas = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                          ref_state.params, s.params)
+    assert max(jax.tree.leaves(deltas)) < 1e-6
+
+
+def test_loss_decreases_overfit():
+    pipe = TokenPipeline(DataConfig(vocab=64, batch=4, seq=16, seed=1))
+    cfg = TINY
+    model = build_model(cfg)
+    trainer = Trainer(model, AdamWConfig(lr=3e-3), TrainerConfig(donate=False))
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    step_fn = trainer.make_train_step()
+    batch, _ = pipe.next_batch(0)   # same batch every step: overfit
+    losses = []
+    for _ in range(30):
+        state, m = step_fn(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.7, losses[::10]
+
+
+def test_microbatch_grad_equivalence():
+    pipe = TokenPipeline(DataConfig(vocab=64, batch=8, seq=8, seed=2))
+    model = build_model(TINY)
+    batch, _ = pipe.next_batch(0)
+    tr1 = Trainer(model, AdamWConfig(lr=1e-3), TrainerConfig(donate=False))
+    tr4 = Trainer(model, AdamWConfig(lr=1e-3),
+                  TrainerConfig(microbatches=4, donate=False))
+    s1 = tr1.init_state(jax.random.PRNGKey(0))
+    s4 = tr4.init_state(jax.random.PRNGKey(0))
+    o1, m1 = tr1.make_train_step()(s1, batch)
+    o4, m4 = tr4.make_train_step()(s4, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=1e-5)
+    deltas = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                          o1.params, o4.params)
+    # reduction-order noise through Adam's rsqrt: ~1e-5-scale is expected
+    assert max(jax.tree.leaves(deltas)) < 1e-4

@@ -1,0 +1,154 @@
+"""Handler table + GAScore datapath unit tests (single device; the
+GAScore stages are pure functions over headers/payloads/state)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import am, gascore as gc, handlers as hd
+from repro.core.state import PgasState, ShoalContext
+from repro.runtime.topology import make_cpu_mesh
+
+
+def make_ctx(segment_words=64):
+    mesh = make_cpu_mesh(1, ("kernel",))
+    return ShoalContext(mesh=mesh, axes=("kernel",),
+                        segment_words=segment_words)
+
+
+def test_builtin_handlers():
+    t = hd.HandlerTable()
+    r = jnp.asarray([1.0, 2.0])
+    p = jnp.asarray([10.0, 20.0])
+    np.testing.assert_allclose(t.dispatch(hd.H_NOP, r, p), [1, 2])
+    np.testing.assert_allclose(t.dispatch(hd.H_WRITE, r, p), [10, 20])
+    np.testing.assert_allclose(t.dispatch(hd.H_ADD, r, p), [11, 22])
+    np.testing.assert_allclose(t.dispatch(hd.H_MAX, r, p), [10, 20])
+    np.testing.assert_allclose(t.dispatch(hd.H_MIN, r, p), [1, 2])
+
+
+def test_custom_handler_registration():
+    t = hd.HandlerTable()
+    hid = t.register("scale2", lambda r, p: r + 2 * p)
+    assert hid == hd.NUM_BUILTIN
+    out = t.dispatch(hid, jnp.asarray([1.0]), jnp.asarray([3.0]))
+    np.testing.assert_allclose(out, [7.0])
+
+
+@settings(max_examples=25, deadline=None)
+@given(handler=st.integers(0, hd.NUM_BUILTIN - 1))
+def test_dispatch_traced_id(handler):
+    t = hd.HandlerTable()
+    r = jnp.asarray([2.0])
+    p = jnp.asarray([5.0])
+    expected = [r[0], p[0], r[0] + p[0], jnp.maximum(r, p)[0],
+                jnp.minimum(r, p)[0]][handler]
+    out = t.dispatch(jnp.asarray(handler), r, p)
+    np.testing.assert_allclose(out[0], expected)
+
+
+def test_ingress_long_write_and_masking():
+    ctx = make_ctx()
+    st_ = PgasState.make(64)
+    pay = jnp.arange(1.0, 5.0)
+    hdr = am.decode(am.encode(type=am.make_type(am.LONG), nwords=4,
+                              dst_addr=10, handler=hd.H_WRITE))
+    out = gc.ingress_long(ctx, st_, hdr, pay, 4)
+    np.testing.assert_allclose(out.segment[10:14], [1, 2, 3, 4])
+    assert int(out.rx_words) == 4
+    # NOP header leaves the segment bit-identical
+    nop = am.decode(jnp.zeros((am.HDR_WORDS,), jnp.int32))
+    out2 = gc.ingress_long(ctx, out, nop, pay, 4)
+    np.testing.assert_array_equal(out2.segment, out.segment)
+    assert int(out2.rx_words) == 4
+
+
+def test_ingress_long_partial_lanes():
+    """nwords < packet width: only valid lanes land."""
+    ctx = make_ctx()
+    st_ = PgasState.make(64)
+    pay = jnp.arange(1.0, 9.0)
+    hdr = am.decode(am.encode(type=am.make_type(am.LONG), nwords=3,
+                              dst_addr=0, handler=hd.H_WRITE))
+    out = gc.ingress_long(ctx, st_, hdr, pay, 8)
+    np.testing.assert_allclose(out.segment[:8], [1, 2, 3, 0, 0, 0, 0, 0])
+
+
+def test_ingress_long_accumulate():
+    ctx = make_ctx()
+    st_ = PgasState.make(64)
+    st_ = gc.dataclasses_replace(st_, segment=st_.segment.at[5].set(10.0))
+    hdr = am.decode(am.encode(type=am.make_type(am.LONG), nwords=1,
+                              dst_addr=5, handler=hd.H_ADD))
+    out = gc.ingress_long(ctx, st_, hdr, jnp.asarray([7.0]), 1)
+    assert float(out.segment[5]) == 17.0
+
+
+def test_serve_get_and_suppression():
+    ctx = make_ctx()
+    st_ = PgasState.make(64)
+    st_ = gc.dataclasses_replace(
+        st_, segment=st_.segment.at[20:24].set(jnp.arange(4.0)))
+    hdr = am.decode(am.encode(type=am.make_type(am.MEDIUM, get=True),
+                              nwords=4, src_addr=20, token=2))
+    st2, resp_hdr, data = gc.serve_get(ctx, st_, hdr, 4)
+    np.testing.assert_allclose(data, [0, 1, 2, 3])
+    rh = am.decode(resp_hdr)
+    assert bool(rh.flag(am.FLAG_REPLY))
+    # non-get header produces a NOP response (no spurious credits)
+    nop_hdr = am.decode(am.encode(type=am.make_type(am.MEDIUM), nwords=4))
+    _, resp2, data2 = gc.serve_get(ctx, st_, nop_hdr, 4)
+    assert int(am.decode(resp2).msg_class) == am.NOP
+    np.testing.assert_allclose(data2, 0)
+
+
+def test_reply_credits():
+    st_ = PgasState.make(8)
+    rep = am.decode(am.reply_for(am.decode(
+        am.encode(type=am.make_type(am.LONG), src=0, dst=1, token=3))))
+    out = gc.ingress_reply(st_, rep)
+    assert int(out.credits[3]) == 1
+    # non-replies do not bump credits
+    out2 = gc.ingress_reply(out, am.decode(
+        am.encode(type=am.make_type(am.SHORT), token=3)))
+    assert int(out2.credits[3]) == 1
+
+
+def test_ingress_short_semaphore():
+    ctx = make_ctx()
+    st_ = PgasState.make(8)
+    hdr = am.decode(am.encode(type=am.make_type(am.SHORT), handler=hd.H_ADD,
+                              token=2, dst_addr=5))
+    out = gc.ingress_short(ctx, st_, hdr)
+    assert int(out.credits[2]) == 5
+
+
+def test_auto_reply_suppression():
+    acked = am.decode(am.encode(type=am.make_type(am.LONG), src=1, dst=2))
+    asyn = am.decode(am.encode(
+        type=am.make_type(am.LONG, asynchronous=True), src=1, dst=2))
+    assert int(am.decode(gc.auto_reply(acked)).msg_class) == am.SHORT
+    assert int(am.decode(gc.auto_reply(asyn)).msg_class) == am.NOP
+    nop = am.decode(jnp.zeros((am.HDR_WORDS,), jnp.int32))
+    assert int(am.decode(gc.auto_reply(nop)).msg_class) == am.NOP
+
+
+def test_egress_memory_sourced():
+    ctx = make_ctx()
+    st_ = PgasState.make(64)
+    st_ = gc.dataclasses_replace(
+        st_, segment=st_.segment.at[8:12].set(jnp.arange(4.0) + 1))
+    hdr = am.decode(am.encode(type=am.make_type(am.LONG), nwords=4,
+                              src_addr=8))
+    buf = gc.egress(ctx, st_, hdr, None, 4)
+    np.testing.assert_allclose(buf, [1, 2, 3, 4])
+
+
+def test_egress_fifo_pads():
+    ctx = make_ctx()
+    st_ = PgasState.make(64)
+    hdr = am.decode(am.encode(type=am.make_type(am.MEDIUM, fifo=True),
+                              nwords=2))
+    buf = gc.egress(ctx, st_, hdr, jnp.asarray([5.0, 6.0]), 2)
+    np.testing.assert_allclose(buf, [5, 6])

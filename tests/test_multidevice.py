@@ -1,0 +1,10 @@
+"""Multi-device Shoal semantics, trainer backend agreement, and elastic
+restart — run in a subprocess with 8 host devices (the main pytest
+process keeps the single real CPU device; see conftest)."""
+
+from conftest import run_subprocess_checks
+
+
+def test_multidevice_semantics():
+    out = run_subprocess_checks("md_checks.py", n_devices=8, timeout=1500)
+    assert "MD_CHECKS_ALL_PASS" in out

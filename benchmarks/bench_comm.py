@@ -1,0 +1,105 @@
+import os
+
+if __name__ == "__main__":
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+
+"""Comm-layer microbenchmarks gating the fused-packet wire format.
+
+Measures the hot configurations the fused single-packet format and the
+batched >MTU segmentation engine exist for, and counts the
+``collective-permute`` ops left in the compiled HLO of each program so
+the collective budget is a *measured* number, not a belief:
+
+* ``put_long`` acked, payload <= MTU      (1 fused packet + 1 reply)
+* ``put_long`` acked, payload = 4 MTUs    (batched: 1 packet + 1 reply)
+* ``put_long`` async, payload = 4 MTUs    (batched: 1 packet)
+* ``get_medium``, payload = 4 MTUs        (1 request + 1 batched response)
+* one full Jacobi iteration at grid 4096 / 8 kernels (the paper's
+  footnote-2 failing configuration: halo row 4096 words > 2250-word MTU)
+
+CSV: ``name,us_per_call,collective_permutes``.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops
+from repro.core.address_space import GlobalAddressSpace
+from repro.core.state import ShoalContext
+from repro.launch.hlo_analysis import parse_collectives
+from repro.runtime import TCP, UDP
+from repro.runtime.topology import make_cpu_mesh
+
+from benchmarks._timing import time_fn
+
+N = 8
+RING = [(i, (i + 1) % N) for i in range(N)]
+
+
+def cp_count(fn, *args) -> float:
+    hlo = jax.jit(fn).lower(*args).compile().as_text()
+    return parse_collectives(hlo).ops.get("collective-permute", 0.0)
+
+
+def bench(name, fn, state0, iters=20):
+    jitted = jax.jit(fn)
+    us = time_fn(jitted, state0, iters=iters)
+    cps = cp_count(fn, state0)
+    print(f"{name},{us:.1f},{cps:.0f}")
+
+
+def main():
+    mesh = make_cpu_mesh(N, ("kernel",))
+    mtu_words = TCP.max_packet_words          # 2250 (9000-byte jumbo frame)
+    seg_words = 4 * mtu_words + 64
+
+    for transport, tname in ((TCP, "acked"), (UDP, "async")):
+        ctx = ShoalContext(mesh=mesh, axes=("kernel",), transport=transport,
+                           segment_words=seg_words)
+        gas = GlobalAddressSpace(ctx)
+        state0 = gas.make_global_state()
+
+        def put1(st, ctx=ctx, transport=transport):
+            pay = jnp.ones((mtu_words,), jnp.float32)
+            return ops.put_long(ctx, st, pay, RING, dst_addr=0, token=1,
+                                asynchronous=not transport.acked)
+
+        bench(f"comm/put_long/{tname}/1seg", gas.spmd(put1), state0)
+
+        def put4(st, ctx=ctx, transport=transport):
+            pay = jnp.ones((4 * mtu_words,), jnp.float32)
+            return ops.put_long(ctx, st, pay, RING, dst_addr=0, token=1,
+                                asynchronous=not transport.acked)
+
+        bench(f"comm/put_long/{tname}/4seg", gas.spmd(put4), state0)
+
+    ctx = ShoalContext(mesh=mesh, axes=("kernel",), transport=TCP,
+                       segment_words=seg_words)
+    gas = GlobalAddressSpace(ctx)
+    state0 = gas.make_global_state()
+
+    def get4(st):
+        st, _ = ops.get_medium(ctx, st, RING, src_addr=0,
+                               nwords=4 * mtu_words, token=2)
+        return st
+
+    bench("comm/get_medium/acked/4seg", gas.spmd(get4), state0)
+
+    # one Jacobi iteration, grid 4096 x 8 kernels: halo rows segment 2x
+    from repro.apps.jacobi import JacobiApp
+    app = JacobiApp(n=4096, kernels=N, iters=1)
+    fn = app.build()
+    gas_j = GlobalAddressSpace(app.ctx)
+    st = gas_j.make_global_state()
+    blocks = jnp.zeros((N, 4096 // N, 4096), jnp.float32)
+    us = time_fn(fn, st, blocks, iters=5, warmup=2)
+    hlo = fn.lower(st, blocks).compile().as_text()
+    cps = parse_collectives(hlo).ops.get("collective-permute", 0.0)
+    print(f"comm/jacobi-iter/4096x8,{us:.1f},{cps:.0f}")
+
+
+if __name__ == "__main__":
+    main()

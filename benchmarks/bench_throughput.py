@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.runtime.jax_compat import shard_map
+
 from repro.core import collectives as coll
 from repro.core import ops
 from repro.core.address_space import GlobalAddressSpace
@@ -62,10 +64,10 @@ def main():
 
     # shoal ring vs fused XLA all-reduce (1 MB payload over all 8 kernels)
     x = jnp.ones((8, 32768), jnp.float32)
-    ring = jax.jit(jax.shard_map(
+    ring = jax.jit(shard_map(
         lambda v: coll.ring_all_reduce(v, ("pod", "chip"), 8), mesh=mesh,
         in_specs=P(("pod", "chip")), out_specs=P(("pod", "chip"))))
-    fused = jax.jit(jax.shard_map(
+    fused = jax.jit(shard_map(
         lambda v: jax.lax.psum(v, ("pod", "chip")), mesh=mesh,
         in_specs=P(("pod", "chip")), out_specs=P(("pod", "chip"))))
     us_ring = time_fn(ring, x, iters=10)

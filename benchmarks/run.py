@@ -1,28 +1,44 @@
-"""Drive all benchmarks; print ``name,us_per_call,derived`` CSV.
+"""Drive all benchmarks; print ``name,us_per_call,derived`` CSV and
+write machine-readable ``BENCH_comm.json`` next to the repo root.
 
 Comm/Jacobi benchmarks need a multi-device host platform, so each runs
 in its own subprocess with XLA_FLAGS=...device_count=8 (the main process
 keeps the single real device, and the production 512-device mesh exists
 only inside dry-run processes).  The roofline section is only emitted if
 a dry-run results file exists.
+
+``BENCH_comm.json`` is the perf trajectory across PRs: for every bench
+the measured ``us_per_call``, and for the comm-layer benches
+(``benchmarks/bench_comm.py``) additionally the ``collective-permute``
+count parsed out of the compiled HLO.  The
+``baseline_pre_fused_wire`` section is frozen — it records the
+measurements taken immediately *before* the fused single-packet wire
+format landed — while ``current`` is overwritten by every run, so any
+future regression is visible as a diff against both.
 """
 
+import json
 import os
+import re
 import subprocess
 import sys
 
 HERE = os.path.dirname(os.path.abspath(__file__))
 REPO = os.path.dirname(HERE)
+BENCH_JSON = os.path.join(REPO, "BENCH_comm.json")
 
 SUBPROCESS_BENCHES = [
+    ("benchmarks.bench_comm", 8),
     ("benchmarks.bench_latency", 8),
     ("benchmarks.bench_throughput", 8),
     ("benchmarks.bench_jacobi", 8),
 ]
 INPROCESS_BENCHES = ["benchmarks.bench_utilization"]
 
+_ROW_RE = re.compile(r"^([\w/.+-]+),(-?[\d.]+),(.*)$")
 
-def run_sub(mod: str, devices: int) -> int:
+
+def run_sub(mod: str, devices: int):
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + REPO
@@ -32,22 +48,75 @@ def run_sub(mod: str, devices: int) -> int:
     if proc.returncode != 0:
         sys.stdout.write(f"{mod},FAILED,rc={proc.returncode}\n")
         sys.stderr.write(proc.stderr[-2000:] + "\n")
-    return proc.returncode
+    return proc.returncode, proc.stdout
+
+
+def parse_rows(stdout: str):
+    rows = []
+    for line in stdout.splitlines():
+        m = _ROW_RE.match(line.strip())
+        if m:
+            rows.append((m.group(1), float(m.group(2)), m.group(3)))
+    return rows
+
+
+def write_bench_json(rows) -> None:
+    """Merge this run into BENCH_comm.json, preserving the frozen
+    pre-fused-wire baseline section."""
+    doc = {"schema": "bench_comm/v1"}
+    if os.path.exists(BENCH_JSON):
+        try:
+            with open(BENCH_JSON) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            sys.stderr.write(
+                f"WARNING: existing {BENCH_JSON} unreadable ({e}); "
+                "restore it from git or the frozen pre-fused-wire "
+                "baseline will be re-seeded from THIS run's numbers\n")
+    comm, benches = {}, {}
+    for name, us, derived in rows:
+        if name.startswith("comm/"):
+            # bench_comm's derived column is the HLO collective-permute
+            # count of the compiled program
+            comm[name] = {"us_per_call": us,
+                          "collective_permutes": float(derived)}
+        else:
+            benches[name] = {"us_per_call": us, "derived": derived}
+    doc["current"] = {"comm": comm, "benches": benches}
+    if "baseline_pre_fused_wire" not in doc:
+        sys.stderr.write(
+            "WARNING: BENCH_comm.json had no baseline_pre_fused_wire "
+            "section; seeding it from this (post-fused-wire) run. The "
+            "true pre-change numbers live in git history.\n")
+        doc["baseline_pre_fused_wire"] = comm
+    with open(BENCH_JSON, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {os.path.relpath(BENCH_JSON, REPO)} "
+          f"({len(comm)} comm rows, {len(benches)} bench rows)")
 
 
 def main() -> None:
     print("name,us_per_call,derived")
     rc = 0
+    rows = []
     for mod, devs in SUBPROCESS_BENCHES:
-        rc |= run_sub(mod, devs)
+        code, out = run_sub(mod, devs)
+        rc |= code
+        rows.extend(parse_rows(out))
     for mod in INPROCESS_BENCHES:
-        rc |= run_sub(mod, 1)
+        code, out = run_sub(mod, 1)
+        rc |= code
+        rows.extend(parse_rows(out))
     results = os.path.join(REPO, "dryrun_results.jsonl")
     if os.path.exists(results):
-        rc |= run_sub("benchmarks.roofline", 1)
+        code, out = run_sub("benchmarks.roofline", 1)
+        rc |= code
+        rows.extend(parse_rows(out))
     else:
         print("roofline,SKIPPED,no dryrun_results.jsonl (run "
               "scripts/run_dryrun_sweep.sh)")
+    write_bench_json(rows)
     if rc:
         raise SystemExit(1)
 

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.runtime.jax_compat import shard_map
+
 from repro.core import collectives, handlers as hd, ops
 from repro.core.address_space import GlobalAddressSpace
 from repro.core.state import ShoalContext
@@ -59,7 +61,7 @@ print(seg[:, 8:12])
 
 # ring all-reduce built from one-sided puts
 xs = jnp.arange(N * 4, dtype=jnp.float32).reshape(N, 4)
-total = jax.jit(jax.shard_map(
+total = jax.jit(shard_map(
     lambda x: collectives.ring_all_reduce(x, ("kernel",), N), mesh=mesh,
     in_specs=P("kernel"), out_specs=P("kernel")))(xs)
 print("ring all-reduce (every kernel holds the column sums):")

@@ -24,6 +24,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
+from repro.runtime.jax_compat import shard_map
 import numpy as np
 
 from repro.core import handlers as hd
@@ -66,14 +68,16 @@ class JacobiApp:
         st = ops.put_long(self.ctx, st, block[-1], self.down, dst_addr=0,
                           handler=hd.H_WRITE, token=2)
         if self.transport.acked:
-            import math
-            pkts = max(1, math.ceil(n / self.ctx.transport.max_packet_words))
+            # Replies coalesce across >MTU segmentation (only the final
+            # packet of a halo row is acked), so each halo *message*
+            # earns exactly one credit regardless of how many packets
+            # the transport split it into.
             me = self.ctx.my_id()
             has_down = (me < self.kernels - 1).astype(jnp.int32)
             has_up = (me > 0).astype(jnp.int32)
             # replies for token 1 come from puts I sent up, etc.
-            st = ops.wait_replies(self.ctx, st, 1, pkts * has_up)
-            st = ops.wait_replies(self.ctx, st, 2, pkts * has_down)
+            st = ops.wait_replies(self.ctx, st, 1, has_up)
+            st = ops.wait_replies(self.ctx, st, 2, has_down)
         return st
 
     def _stencil(self, block_pad: jnp.ndarray, kid) -> jnp.ndarray:
@@ -131,7 +135,7 @@ class JacobiApp:
             return (jax.tree.map(lambda x: x[None], st), block[None])
 
         spec = P(("kernel",))
-        fn = jax.shard_map(per_kernel, mesh=self.mesh,
+        fn = shard_map(per_kernel, mesh=self.mesh,
                            in_specs=(spec, spec), out_specs=(spec, spec))
         return jax.jit(fn)
 

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.runtime.jax_compat import shard_map
+
 from repro.core.state import PgasState, ShoalContext
 
 
@@ -104,5 +106,5 @@ class GlobalAddressSpace:
             out = fn(state)
             return jax.tree.map(lambda x: x[None], out)
 
-        return jax.shard_map(inner, mesh=self.ctx.mesh, in_specs=spec,
+        return shard_map(inner, mesh=self.ctx.mesh, in_specs=spec,
                              out_specs=spec, **kw)

@@ -1,11 +1,25 @@
-"""Active Message wire format (paper Sec. III-A).
+"""Active Message wire format (paper Sec. III-A): fused single packets.
 
-Every Shoal message is ``header ++ payload``.  The header is a fixed
-12-word int32 vector so it can travel through the same typed stream as
-the payload (the GAScore parses it with dynamic slices, exactly like the
-hardware IP parses the AXIS stream).  An all-zero header is an explicit
-NOP: kernels that do not participate in a collectivized AM call receive
-zeros from ``ppermute`` and must take no action and send no reply.
+On the wire a Shoal message is ``header ++ payload`` in ONE typed
+stream — the hardware GAScore parses a single AXIS burst, it never
+receives the header and the payload as separate transactions.  This
+module reproduces that layout exactly: a *packet* is one int32 vector
+
+    [ header (12 words) | extra (optional int32 section) | payload bits ]
+
+where the payload's 32-bit lanes are bitcast to int32 (lossless both
+ways), so a whole AM — header, vectored address list, data — crosses a
+link in a **single** ``ppermute`` instead of one collective per section.
+For >MTU AMs the op layer stacks ``nseg`` such packets into a
+``(nseg, HDR_WORDS + packet_words)`` matrix and still ships them with
+one collective (see :mod:`repro.core.ops`).
+
+The header is a fixed 12-word int32 vector so it can travel through the
+same typed stream as the payload (the GAScore parses it with dynamic
+slices, exactly like the hardware IP parses the AXIS stream).  An
+all-zero header is an explicit NOP: kernels that do not participate in a
+collectivized AM call receive zeros from ``ppermute`` and must take no
+action and send no reply.
 
 Word layout::
 
@@ -20,11 +34,15 @@ Word layout::
     8  stride    words between strided blocks
     9  blk_words words per strided block
     10 nblocks   number of strided blocks
-    11 seq       segment sequence number (k of n) for >MTU segmentation
+    11 seq       segment sequence number (word offset) for >MTU segmentation
 
 The class/flag split mirrors the paper: three AM classes, each with
 put/get direction, FIFO vs memory payload source, optional strided /
 vectored addressing, and an async flag that suppresses the auto-reply.
+Reply coalescing for segmented AMs rides on the async flag: the op
+layer marks every segment but the last asynchronous, so an acked >MTU
+message costs one reply total — one credit per *message*, not per
+packet.
 """
 
 from __future__ import annotations
@@ -32,6 +50,7 @@ from __future__ import annotations
 import dataclasses
 
 import jax.numpy as jnp
+from jax import lax
 
 HDR_WORDS = 12
 
@@ -108,10 +127,82 @@ def encode(**fields) -> jnp.ndarray:
     return jnp.stack(vals)
 
 
+def encode_batch(n: int, **fields) -> jnp.ndarray:
+    """Build ``n`` headers at once: an ``(n, HDR_WORDS)`` int32 matrix.
+
+    Scalar fields broadcast across all rows; ``(n,)``-shaped fields are
+    per-row (per-segment offsets, per-segment types, ...).  This is the
+    header side of the batched >MTU segmentation plan: one matrix, one
+    collective.
+    """
+    unknown = set(fields) - set(FIELDS)
+    if unknown:
+        raise ValueError(f"unknown header fields: {unknown}")
+    cols = [jnp.broadcast_to(jnp.asarray(fields.get(f, 0), jnp.int32), (n,))
+            for f in FIELDS]
+    return jnp.stack(cols, axis=1)
+
+
 def decode(hdr: jnp.ndarray) -> Header:
     if hdr.shape != (HDR_WORDS,):
         raise ValueError(f"header must be ({HDR_WORDS},), got {hdr.shape}")
     return Header(*(hdr[i] for i in range(HDR_WORDS)))
+
+
+# --------------------------------------------------------------------------
+# fused packets: header ++ [extra ++] payload in one int32 stream
+# --------------------------------------------------------------------------
+
+def wire_dtype_ok(dtype) -> bool:
+    """Payload dtypes that bitcast losslessly onto the int32 wire."""
+    return jnp.dtype(dtype).itemsize == 4
+
+
+def to_wire(payload: jnp.ndarray) -> jnp.ndarray:
+    """Bitcast a 32-bit payload onto int32 wire lanes (bit-exact)."""
+    if payload.dtype == jnp.int32:
+        return payload
+    if not wire_dtype_ok(payload.dtype):
+        raise TypeError(
+            f"fused packets need a 32-bit payload dtype, got {payload.dtype}")
+    return lax.bitcast_convert_type(payload, jnp.int32)
+
+
+def from_wire(words: jnp.ndarray, dtype) -> jnp.ndarray:
+    """Inverse of :func:`to_wire`."""
+    if jnp.dtype(dtype) == jnp.int32:
+        return words
+    return lax.bitcast_convert_type(words, jnp.dtype(dtype))
+
+
+def pack_packet(hdr: jnp.ndarray, payload: jnp.ndarray | None = None,
+                extra: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Fuse ``header ++ [extra ++] payload`` into one int32 packet.
+
+    Works on single packets (``hdr``: ``(HDR_WORDS,)``) and batched
+    segment stacks (``hdr``: ``(nseg, HDR_WORDS)``) alike — sections
+    concatenate along the last axis.
+    """
+    parts = [hdr.astype(jnp.int32)]
+    if extra is not None:
+        parts.append(extra.astype(jnp.int32))
+    if payload is not None:
+        parts.append(to_wire(payload))
+    return jnp.concatenate(parts, axis=-1) if len(parts) > 1 else parts[0]
+
+
+def unpack_packet(pkt: jnp.ndarray, dtype, n_extra: int = 0):
+    """Split a fused packet back into ``(header, [extra,] payload)``.
+
+    ``dtype`` is the payload dtype to bitcast the trailing lanes back
+    to; ``n_extra`` the length of the int32 extra section (vectored
+    address lists).  Batched ``(nseg, ...)`` packets split row-wise.
+    """
+    hdr = pkt[..., :HDR_WORDS]
+    pay = from_wire(pkt[..., HDR_WORDS + n_extra:], dtype)
+    if n_extra:
+        return hdr, pkt[..., HDR_WORDS:HDR_WORDS + n_extra], pay
+    return hdr, pay
 
 
 def reply_for(hdr: Header) -> jnp.ndarray:

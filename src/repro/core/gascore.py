@@ -25,17 +25,31 @@ only lowers the stages it needs.
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 from jax import lax
 
 from repro.core import am
 from repro.core import handlers as hd
 from repro.core.state import PgasState, ShoalContext
+from repro.kernels.am_pack.ref import strided_indices
+
+_I_NWORDS = am.FIELDS.index("nwords")
+_I_SRC_ADDR = am.FIELDS.index("src_addr")
 
 
 def _lane_mask(nwords, width: int, dtype=jnp.bool_):
     """mask[i] = i < nwords   (valid payload lanes in a fixed-size buffer)."""
     return (lax.iota(jnp.int32, width) < nwords).astype(dtype)
+
+
+def _pad_segment(segment: jnp.ndarray, packet_words: int) -> jnp.ndarray:
+    """Append a packet-width zero tail so a partial final segment of a
+    batched >MTU plan (lanes masked beyond ``nwords``, buffer still
+    ``packet_words`` wide) can read/land flush against the segment end
+    without the address clip sliding the window."""
+    return jnp.concatenate(
+        [segment, jnp.zeros((packet_words,), segment.dtype)])
 
 
 def egress(ctx: ShoalContext, state: PgasState, hdr: am.Header,
@@ -57,6 +71,33 @@ def egress(ctx: ShoalContext, state: PgasState, hdr: am.Header,
     return pay * mask
 
 
+def egress_batch(ctx: ShoalContext, state: PgasState, hdr_rows: jnp.ndarray,
+                 fifo_payload: jnp.ndarray | None, packet_words: int):
+    """Batched :func:`egress`: one ``(nseg, packet_words)`` buffer for a
+    whole segmentation plan (am_tx reading every segment of one >MTU AM
+    in a single pass).
+
+    FIFO AMs slice the flat kernel payload row-wise (every row but the
+    last is full, so a pad + reshape is exact); memory-sourced AMs
+    gather each row at its own ``src_addr``.  Per-row lanes beyond that
+    row's ``nwords`` are zeroed.
+    """
+    nseg = hdr_rows.shape[0]
+    if fifo_payload is not None:
+        flat = fifo_payload.astype(state.segment.dtype).reshape(-1)
+        flat = jnp.pad(flat, (0, nseg * packet_words - flat.size))
+        rows = flat.reshape(nseg, packet_words)
+    else:
+        seg_p = _pad_segment(state.segment, packet_words)
+        addrs = jnp.clip(hdr_rows[:, _I_SRC_ADDR], 0, ctx.segment_words)
+        rows = jax.vmap(
+            lambda a: lax.dynamic_slice(seg_p, (a,), (packet_words,))
+        )(addrs)
+    lanes = lax.broadcasted_iota(jnp.int32, (nseg, packet_words), 1)
+    mask = (lanes < hdr_rows[:, _I_NWORDS][:, None]).astype(rows.dtype)
+    return rows * mask
+
+
 def ingress_long(ctx: ShoalContext, state: PgasState, hdr: am.Header,
                  payload: jnp.ndarray, packet_words: int) -> PgasState:
     """Long-put ingress: payload -> shared memory via handler (am_rx path).
@@ -66,44 +107,122 @@ def ingress_long(ctx: ShoalContext, state: PgasState, hdr: am.Header,
     Non-participating kernels see a NOP header and leave their segment
     bit-identical.
     """
+    st = _ingress_long_padded(
+        ctx, dataclasses_replace(state,
+                                 segment=_pad_segment(state.segment,
+                                                      packet_words)),
+        hdr, payload, packet_words)
+    return dataclasses_replace(st, segment=st.segment[:ctx.segment_words])
+
+
+def _ingress_long_padded(ctx: ShoalContext, state: PgasState, hdr: am.Header,
+                         payload: jnp.ndarray, packet_words: int) -> PgasState:
+    """:func:`ingress_long` body over a state whose segment already has
+    the packet-width pad (see :func:`_pad_segment`) — so a batched scan
+    pads once outside the loop, not once per segment."""
     active = hdr.msg_class == am.LONG
-    addr = jnp.clip(hdr.dst_addr, 0, ctx.segment_words - packet_words)
+    addr = jnp.clip(hdr.dst_addr, 0, ctx.segment_words)
     region = lax.dynamic_slice(state.segment, (addr,), (packet_words,))
     new_region = ctx.handlers.dispatch(hdr.handler, region, payload)
     lanes = _lane_mask(hdr.nwords, packet_words)
     new_region = jnp.where(lanes & active, new_region, region)
     segment = lax.dynamic_update_slice(state.segment, new_region, (addr,))
-    state = PgasState(
-        segment=segment,
-        credits=state.credits,
-        barrier_epoch=state.barrier_epoch,
-        rx_words=state.rx_words + jnp.where(active, hdr.nwords, 0),
-        tx_words=state.tx_words,
-        error=state.error,
-    )
-    return state
+    return dataclasses_replace(
+        state, segment=segment,
+        rx_words=state.rx_words + jnp.where(active, hdr.nwords, 0))
+
+
+def ingress_long_batch(ctx: ShoalContext, state: PgasState,
+                       hdr_rows: jnp.ndarray, pay_rows: jnp.ndarray,
+                       packet_words: int) -> PgasState:
+    """Absorb a whole ``(nseg, ...)`` segment stack: a ``lax.scan`` of
+    :func:`ingress_long` over the rows (one fused segment update per
+    row; no collectives inside the loop, and the packet-width pad is
+    applied once around the scan, not per row)."""
+    if hdr_rows.shape[0] == 1:
+        return ingress_long(ctx, state, am.decode(hdr_rows[0]), pay_rows[0],
+                            packet_words)
+
+    def body(st, row):
+        h, p = row
+        return _ingress_long_padded(ctx, st, am.decode(h), p,
+                                    packet_words), ()
+
+    state = dataclasses_replace(
+        state, segment=_pad_segment(state.segment, packet_words))
+    state, _ = lax.scan(body, state, (hdr_rows, pay_rows))
+    return dataclasses_replace(state,
+                               segment=state.segment[:ctx.segment_words])
+
+
+def ingress_medium_batch(state: PgasState, hdr_rows: jnp.ndarray,
+                         pay_rows: jnp.ndarray, packet_words: int):
+    """Batched :func:`ingress_medium`; returns ``(state, delivered)``
+    with ``delivered`` the flattened ``(nseg * packet_words,)`` lane
+    stream (full rows first, so the first ``nwords`` lanes are the
+    message payload)."""
+    if hdr_rows.shape[0] == 1:
+        st, part = ingress_medium(state, am.decode(hdr_rows[0]), pay_rows[0],
+                                  packet_words)
+        return st, part
+
+    def body(st, row):
+        h, p = row
+        st, part = ingress_medium(st, am.decode(h), p, packet_words)
+        return st, part
+
+    state, parts = lax.scan(body, state, (hdr_rows, pay_rows))
+    return state, parts.reshape(-1)
 
 
 def ingress_strided(ctx: ShoalContext, state: PgasState, hdr: am.Header,
                     payload: jnp.ndarray, blk_words: int, nblocks: int) -> PgasState:
-    """Strided Long-put ingress: scatter ``nblocks`` blocks of
-    ``blk_words`` to ``dst_addr + i*stride`` (paper carries strided AMs
-    forward from THeGASNet).  Block geometry is static (trace-time);
-    the stride itself may be traced."""
+    """Strided Long-put ingress: scatter blocks of ``blk_words`` to
+    ``dst_addr + i*stride`` (paper carries strided AMs forward from
+    THeGASNet).
+
+    Vectorized as one flat gather -> handler -> scatter over the whole
+    packed payload (the same index map as the :mod:`repro.kernels.am_pack`
+    DataMover kernels) instead of a per-block ``fori_loop``.  ``nblocks``
+    / ``blk_words`` are the *static* packet capacity; the actual block
+    count is ``hdr.nblocks`` (lanes beyond it are dropped), so one shape
+    serves every row of a batched segmentation plan.  Overlapping
+    blocks (``stride < blk_words``) scatter in undefined lane order,
+    matching the am_pack oracle.
+    """
     active = hdr.msg_class == am.LONG
-
-    def body(i, seg):
-        blk = lax.dynamic_slice(payload, (i * blk_words,), (blk_words,))
-        addr = jnp.clip(hdr.dst_addr + i * hdr.stride, 0,
-                        ctx.segment_words - blk_words)
-        region = lax.dynamic_slice(seg, (addr,), (blk_words,))
-        new = ctx.handlers.dispatch(hdr.handler, region, blk)
-        new = jnp.where(active, new, region)
-        return lax.dynamic_update_slice(seg, new, (addr,))
-
-    segment = lax.fori_loop(0, nblocks, body, state.segment)
+    flat = nblocks * blk_words
+    idx = strided_indices(hdr.dst_addr, hdr.stride, blk_words, nblocks)
+    blk_i = lax.iota(jnp.int32, flat) // blk_words
+    valid = active & (blk_i < hdr.nblocks) \
+        & _lane_mask(hdr.nwords, flat) & (idx >= 0) \
+        & (idx < ctx.segment_words)
+    idx_c = jnp.clip(idx, 0, ctx.segment_words - 1)
+    region = state.segment[idx_c]
+    new = ctx.handlers.dispatch(hdr.handler, region, payload)
+    # invalid lanes scatter out of bounds and are dropped
+    scatter_idx = jnp.where(valid, idx_c, ctx.segment_words)
+    segment = state.segment.at[scatter_idx].set(
+        jnp.where(valid, new, region), mode="drop")
     return dataclasses_replace(state, segment=segment,
                                rx_words=state.rx_words + jnp.where(active, hdr.nwords, 0))
+
+
+def ingress_strided_batch(ctx: ShoalContext, state: PgasState,
+                          hdr_rows: jnp.ndarray, pay_rows: jnp.ndarray,
+                          blk_words: int, nblocks: int) -> PgasState:
+    """Scan of :func:`ingress_strided` over a batched segment stack
+    (``nblocks`` = static per-row block capacity)."""
+    if hdr_rows.shape[0] == 1:
+        return ingress_strided(ctx, state, am.decode(hdr_rows[0]), pay_rows[0],
+                               blk_words, nblocks)
+
+    def body(st, row):
+        h, p = row
+        return ingress_strided(ctx, st, am.decode(h), p, blk_words, nblocks), ()
+
+    state, _ = lax.scan(body, state, (hdr_rows, pay_rows))
+    return state
 
 
 def ingress_medium(state: PgasState, hdr: am.Header, payload: jnp.ndarray,
@@ -141,15 +260,14 @@ def ingress_short(ctx: ShoalContext, state: PgasState, hdr: am.Header) -> PgasSt
     return dataclasses_replace(state, credits=credits)
 
 
-def serve_get(ctx: ShoalContext, state: PgasState, hdr: am.Header,
-              packet_words: int):
-    """Get-request service: read ``nwords`` at ``src_addr`` from the local
-    segment and return (data_header, data_payload) to ship back.  The
-    response is marked as a reply so the requester's credit bumps on
-    receipt — for gets, the data return *is* the reply."""
+def _serve_get_row(ctx: ShoalContext, seg_p: jnp.ndarray, hdr: am.Header,
+                   packet_words: int):
+    """Stateless get service for one packet over a segment that already
+    has the packet-width pad (see :func:`_pad_segment`): returns
+    ``(resp_hdr, data, tx_words)``."""
     is_get = hdr.flag(am.FLAG_GET)
-    addr = jnp.clip(hdr.src_addr, 0, ctx.segment_words - packet_words)
-    data = lax.dynamic_slice(state.segment, (addr,), (packet_words,))
+    addr = jnp.clip(hdr.src_addr, 0, ctx.segment_words)
+    data = lax.dynamic_slice(seg_p, (addr,), (packet_words,))
     data = data * _lane_mask(hdr.nwords, packet_words, data.dtype)
     data = data * is_get.astype(data.dtype)
     # Response header is NOP unless this really was a get request, so
@@ -162,12 +280,35 @@ def serve_get(ctx: ShoalContext, state: PgasState, hdr: am.Header,
     resp_hdr = am.encode(
         type=0, src=hdr.dst, dst=hdr.src, nwords=hdr.nwords,
         dst_addr=hdr.dst_addr, token=hdr.token,
-        handler=hdr.handler,
+        handler=hdr.handler, seq=hdr.seq,
     ).at[0].set(resp_type)
     resp_hdr = jnp.where(is_get, resp_hdr, jnp.zeros_like(resp_hdr))
-    state = dataclasses_replace(
-        state, tx_words=state.tx_words + jnp.where(is_get, hdr.nwords, 0))
+    return resp_hdr, data, jnp.where(is_get, hdr.nwords, 0)
+
+
+def serve_get(ctx: ShoalContext, state: PgasState, hdr: am.Header,
+              packet_words: int):
+    """Get-request service: read ``nwords`` at ``src_addr`` from the local
+    segment and return (data_header, data_payload) to ship back.  The
+    response is marked as a reply so the requester's credit bumps on
+    receipt — for gets, the data return *is* the reply."""
+    resp_hdr, data, tx = _serve_get_row(
+        ctx, _pad_segment(state.segment, packet_words), hdr, packet_words)
+    state = dataclasses_replace(state, tx_words=state.tx_words + tx)
     return state, resp_hdr, data
+
+
+def serve_get_batch(ctx: ShoalContext, state: PgasState,
+                    hdr_rows: jnp.ndarray, packet_words: int):
+    """Vectorized get service over a ``(nseg, HDR_WORDS)`` request stack:
+    every segment of a >MTU get is read in one pass and the whole
+    response ships back as one fused packet stack."""
+    seg_p = _pad_segment(state.segment, packet_words)
+    resp_rows, data_rows, tx = jax.vmap(
+        lambda h: _serve_get_row(ctx, seg_p, am.decode(h), packet_words)
+    )(hdr_rows)
+    state = dataclasses_replace(state, tx_words=state.tx_words + tx.sum())
+    return state, resp_rows, data_rows
 
 
 def auto_reply(hdr: am.Header) -> jnp.ndarray:

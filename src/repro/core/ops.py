@@ -12,11 +12,21 @@ which costs four.
 All ops must run inside ``shard_map`` over ``ctx.axes`` (use
 ``ctx.spmd``).  They thread :class:`PgasState` functionally.
 
+Wire model: one collective per link traversal.  Header and payload are
+fused into a single int32 packet (:func:`repro.core.am.pack_packet`) so
+a whole AM crosses a link in ONE ``ppermute`` — the wire shape of the
+paper's GAScore, which parses a single AXIS stream, never two.
+
 Message-size segmentation: AMs whose payload exceeds the transport's
 ``max_packet_words`` are transparently split into sequence-numbered
 packets.  The paper hits this limit (9000-byte jumbo frames) in the
 Jacobi application and leaves segmentation as future work (footnote 2);
-we implement it.
+we implement it with a *batched plan*: all ``nseg`` packets are stacked
+into one ``(nseg, HDR_WORDS + packet_words)`` buffer, shipped with a
+single collective, and absorbed by a scanned GAScore ingress.  Replies
+coalesce — every segment but the last is marked async — so an acked
+>MTU message costs 2 link traversals total (1 batched packet + 1 reply)
+and earns ONE credit per message, not one per packet.
 """
 
 from __future__ import annotations
@@ -55,19 +65,37 @@ def _dst_of(ctx: ShoalContext, pattern: Pattern):
 
 
 def _exchange(ctx: ShoalContext, pattern: Pattern, hdr: jnp.ndarray,
-              payload: jnp.ndarray | None):
-    """One link traversal: ship (header, payload) along ``pattern``.
+              payload: jnp.ndarray | None, extra: jnp.ndarray | None = None):
+    """One link traversal: ship ``header ++ [extra ++] payload`` along
+    ``pattern`` as ONE fused packet (a single ``ppermute``), batched or
+    not.  Header-only messages are already single packets.
 
-    Pure-local patterns (src == dst for every pair) short-circuit: no
-    collective is issued, mirroring libGalapagos' internal routing for
-    same-node kernels.
+    Returns ``(hdr, payload)`` — plus ``extra`` in the middle when an
+    extra section was given.  Pure-local patterns (src == dst for every
+    pair) short-circuit: no collective is issued, mirroring
+    libGalapagos' internal routing for same-node kernels.  Non-32-bit
+    payloads cannot bitcast onto the int32 wire and fall back to split
+    collectives.
     """
     remote = [(s, d) for (s, d) in pattern if s != d]
     if not remote:
-        return hdr, payload
-    hdr_r = lax.ppermute(hdr, ctx.axes, pattern)
-    pay_r = None if payload is None else lax.ppermute(payload, ctx.axes, pattern)
-    return hdr_r, pay_r
+        return (hdr, extra, payload) if extra is not None else (hdr, payload)
+    if payload is None and extra is None:
+        return lax.ppermute(hdr, ctx.axes, pattern), None
+    if payload is not None and not am.wire_dtype_ok(payload.dtype):
+        hdr_r = lax.ppermute(hdr, ctx.axes, pattern)
+        pay_r = lax.ppermute(payload, ctx.axes, pattern)
+        if extra is None:
+            return hdr_r, pay_r
+        return hdr_r, lax.ppermute(extra, ctx.axes, pattern), pay_r
+    n_extra = 0 if extra is None else extra.shape[-1]
+    dtype = jnp.int32 if payload is None else payload.dtype
+    pkt = am.pack_packet(hdr, payload, extra)
+    pkt_r = lax.ppermute(pkt, ctx.axes, pattern)
+    out = am.unpack_packet(pkt_r, dtype, n_extra)
+    if payload is None and extra is not None:
+        return out[0], out[1], None
+    return out
 
 
 def _mask_nonparticipants(ctx: ShoalContext, pattern: Pattern, hdr: jnp.ndarray):
@@ -76,7 +104,10 @@ def _mask_nonparticipants(ctx: ShoalContext, pattern: Pattern, hdr: jnp.ndarray)
 
 def _deliver_reply(ctx: ShoalContext, state: PgasState, pattern: Pattern,
                    hdr_at_dst: am.Header) -> PgasState:
-    """Ship the auto-reply back along the reversed pattern and absorb it."""
+    """Ship the auto-reply back along the reversed pattern and absorb it.
+
+    For batched >MTU plans this is called once with the *final* segment's
+    header — the only acked one — so a whole message costs one reply."""
     if not ctx.transport.acked:
         return state
     rep = gc.auto_reply(hdr_at_dst)
@@ -94,6 +125,28 @@ def _segments(nwords: int, limit: int):
         out.append((off, w))
         off += w
     return out
+
+
+def _resolve_nwords(payload, from_segment_addr, nwords, op_name: str) -> int:
+    """Validate the two calling conventions and return the message size."""
+    if payload is not None:
+        return int(payload.size)
+    if from_segment_addr is None or nwords is None:
+        raise ValueError(
+            f"{op_name}: pass either `payload` (FIFO variant: data from "
+            "the kernel) or `from_segment_addr` AND `nwords` "
+            "(memory-sourced variant: data read from the local segment)")
+    return int(nwords)
+
+
+def _seg_types(msg_class: int, nseg: int, *, asynchronous: bool, **flags):
+    """Per-segment type words: every segment but the last is async, so
+    an acked message triggers exactly one (coalesced) reply."""
+    t_last = am.make_type(msg_class, asynchronous=asynchronous, **flags)
+    t_tail = am.make_type(msg_class, asynchronous=True, **flags)
+    if nseg == 1:
+        return t_last
+    return jnp.where(jnp.arange(nseg) == nseg - 1, t_last, t_tail)
 
 
 # --------------------------------------------------------------------------
@@ -133,33 +186,31 @@ def put_medium(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray | None,
     default is the FIFO variant with ``payload`` from the kernel.
 
     Returns ``(state, delivered)``; ``delivered`` is zeros on kernels
-    that receive nothing this call.
+    that receive nothing this call.  >MTU payloads ship as one batched
+    packet stack: a single collective plus (if acked) a single
+    coalesced reply.
     """
-    if payload is not None:
-        nwords = int(payload.size)
-    assert nwords is not None
-    limit = ctx.transport.max_packet_words
+    nwords = _resolve_nwords(payload, from_segment_addr, nwords, "put_medium")
     fifo = from_segment_addr is None
-    out_parts = []
-    for off, w in _segments(nwords, limit):
-        t = am.make_type(am.MEDIUM, asynchronous=asynchronous, fifo=fifo)
-        src_addr = 0 if fifo else from_segment_addr + off
-        hdr = am.encode(type=t, src=ctx.my_id(), dst=_dst_of(ctx, pattern),
-                        nwords=w, handler=handler, token=token,
-                        src_addr=src_addr, seq=off)
-        hdr = _mask_nonparticipants(ctx, pattern, hdr)
-        chunk = payload.reshape(-1)[off:off + w] if fifo else None
-        buf = gc.egress(ctx, state, am.decode(hdr), chunk, w)
-        state = gc.dataclasses_replace(
-            state, tx_words=state.tx_words +
-            jnp.where(_is_sender(ctx, pattern), w, 0))
-        hdr_r, pay_r = _exchange(ctx, pattern, hdr, buf)
-        h = am.decode(hdr_r)
-        state, part = gc.ingress_medium(state, h, pay_r, w)
-        state = _deliver_reply(ctx, state, pattern, h)
-        out_parts.append(part)
-    delivered = jnp.concatenate(out_parts) if len(out_parts) > 1 else out_parts[0]
-    return state, delivered
+    segs = _segments(nwords, ctx.transport.max_packet_words)
+    nseg, W = len(segs), segs[0][1]
+    offs = jnp.asarray([o for o, _ in segs], jnp.int32)
+    ws = jnp.asarray([w for _, w in segs], jnp.int32)
+    hdrs = am.encode_batch(
+        nseg,
+        type=_seg_types(am.MEDIUM, nseg, asynchronous=asynchronous, fifo=fifo),
+        src=ctx.my_id(), dst=_dst_of(ctx, pattern), nwords=ws,
+        handler=handler, token=token,
+        src_addr=0 if fifo else from_segment_addr + offs, seq=offs)
+    hdrs = _mask_nonparticipants(ctx, pattern, hdrs)
+    buf = gc.egress_batch(ctx, state, hdrs, payload if fifo else None, W)
+    state = gc.dataclasses_replace(
+        state, tx_words=state.tx_words +
+        jnp.where(_is_sender(ctx, pattern), nwords, 0))
+    hdr_r, pay_r = _exchange(ctx, pattern, hdrs, buf)
+    state, delivered = gc.ingress_medium_batch(state, hdr_r, pay_r, W)
+    state = _deliver_reply(ctx, state, pattern, am.decode(hdr_r[-1]))
+    return state, delivered[:nwords]
 
 
 # --------------------------------------------------------------------------
@@ -174,29 +225,32 @@ def put_long(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray | None,
     ``dst_addr``, applied through ``handler`` (H_WRITE = plain put,
     H_ADD = remote accumulate, ...).  FIFO variant when ``payload`` is
     given; memory-sourced variant when ``from_segment_addr`` is.
+
+    >MTU payloads ship as one ``(nseg, HDR+W)`` packet stack — a single
+    collective — and are absorbed by a scanned GAScore ingress; an acked
+    message earns ONE credit (the final segment carries the ack).
     """
-    if payload is not None:
-        nwords = int(payload.size)
-    assert nwords is not None
-    limit = ctx.transport.max_packet_words
-    for off, w in _segments(nwords, limit):
-        fifo = from_segment_addr is None
-        t = am.make_type(am.LONG, asynchronous=asynchronous, fifo=fifo)
-        src_addr = 0 if fifo else from_segment_addr + off
-        hdr = am.encode(type=t, src=ctx.my_id(), dst=_dst_of(ctx, pattern),
-                        nwords=w, dst_addr=dst_addr + off, src_addr=src_addr,
-                        handler=handler, token=token, seq=off)
-        hdr = _mask_nonparticipants(ctx, pattern, hdr)
-        chunk = payload.reshape(-1)[off:off + w] if fifo else None
-        buf = gc.egress(ctx, state, am.decode(hdr), chunk, w)
-        state = gc.dataclasses_replace(
-            state, tx_words=state.tx_words +
-            jnp.where(_is_sender(ctx, pattern), w, 0))
-        hdr_r, pay_r = _exchange(ctx, pattern, hdr, buf)
-        h = am.decode(hdr_r)
-        state = gc.ingress_long(ctx, state, h, pay_r, w)
-        state = _deliver_reply(ctx, state, pattern, h)
-    return state
+    nwords = _resolve_nwords(payload, from_segment_addr, nwords, "put_long")
+    fifo = from_segment_addr is None
+    segs = _segments(nwords, ctx.transport.max_packet_words)
+    nseg, W = len(segs), segs[0][1]
+    offs = jnp.asarray([o for o, _ in segs], jnp.int32)
+    ws = jnp.asarray([w for _, w in segs], jnp.int32)
+    hdrs = am.encode_batch(
+        nseg,
+        type=_seg_types(am.LONG, nseg, asynchronous=asynchronous, fifo=fifo),
+        src=ctx.my_id(), dst=_dst_of(ctx, pattern), nwords=ws,
+        dst_addr=dst_addr + offs,
+        src_addr=0 if fifo else from_segment_addr + offs,
+        handler=handler, token=token, seq=offs)
+    hdrs = _mask_nonparticipants(ctx, pattern, hdrs)
+    buf = gc.egress_batch(ctx, state, hdrs, payload if fifo else None, W)
+    state = gc.dataclasses_replace(
+        state, tx_words=state.tx_words +
+        jnp.where(_is_sender(ctx, pattern), nwords, 0))
+    hdr_r, pay_r = _exchange(ctx, pattern, hdrs, buf)
+    state = gc.ingress_long_batch(ctx, state, hdr_r, pay_r, W)
+    return _deliver_reply(ctx, state, pattern, am.decode(hdr_r[-1]))
 
 
 def put_long_strided(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray,
@@ -208,33 +262,34 @@ def put_long_strided(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray,
     by the paper).  ``payload`` is the packed (nblocks*blk_words,)
     buffer — see :mod:`repro.kernels.am_pack` for the packing hot path.
     Block geometry is static; stride may be traced.
+
+    >MTU messages segment at block granularity into one batched packet
+    stack (single collective, one coalesced reply).
     """
     nwords = blk_words * nblocks
-    if nwords > ctx.transport.max_packet_words:
-        # segment at block granularity
-        per = max(1, ctx.transport.max_packet_words // blk_words)
-        for b0 in range(0, nblocks, per):
-            nb = min(per, nblocks - b0)
-            sub = payload[b0 * blk_words:(b0 + nb) * blk_words]
-            state = put_long_strided(
-                ctx, state, sub, pattern, dst_addr + b0 * stride, stride,
-                blk_words=blk_words, nblocks=nb, handler=handler,
-                token=token, asynchronous=asynchronous)
-        return state
-    t = am.make_type(am.LONG, asynchronous=asynchronous, fifo=True, strided=True)
-    hdr = am.encode(type=t, src=ctx.my_id(), dst=_dst_of(ctx, pattern),
-                    nwords=nwords, dst_addr=dst_addr, handler=handler,
-                    token=token, stride=stride, blk_words=blk_words,
-                    nblocks=nblocks)
-    hdr = _mask_nonparticipants(ctx, pattern, hdr)
-    buf = gc.egress(ctx, state, am.decode(hdr), payload, nwords)
+    # blocks per packet; >MTU plans segment at block granularity
+    per = max(1, ctx.transport.max_packet_words // blk_words)
+    nseg = -(-nblocks // per)
+    nb = jnp.minimum(per, nblocks - per * jnp.arange(nseg)).astype(jnp.int32)
+    W = min(per, nblocks) * blk_words
+    offs = jnp.arange(nseg, dtype=jnp.int32) * (per * blk_words)
+    hdrs = am.encode_batch(
+        nseg,
+        type=_seg_types(am.LONG, nseg, asynchronous=asynchronous,
+                        fifo=True, strided=True),
+        src=ctx.my_id(), dst=_dst_of(ctx, pattern), nwords=nb * blk_words,
+        dst_addr=dst_addr + jnp.arange(nseg) * per * stride,
+        handler=handler, token=token, stride=stride, blk_words=blk_words,
+        nblocks=nb, seq=offs)
+    hdrs = _mask_nonparticipants(ctx, pattern, hdrs)
+    buf = gc.egress_batch(ctx, state, hdrs, payload, W)
     state = gc.dataclasses_replace(
         state, tx_words=state.tx_words +
         jnp.where(_is_sender(ctx, pattern), nwords, 0))
-    hdr_r, pay_r = _exchange(ctx, pattern, hdr, buf)
-    h = am.decode(hdr_r)
-    state = gc.ingress_strided(ctx, state, h, pay_r, blk_words, nblocks)
-    return _deliver_reply(ctx, state, pattern, h)
+    hdr_r, pay_r = _exchange(ctx, pattern, hdrs, buf)
+    state = gc.ingress_strided_batch(ctx, state, hdr_r, pay_r, blk_words,
+                                     min(per, nblocks))
+    return _deliver_reply(ctx, state, pattern, am.decode(hdr_r[-1]))
 
 
 def put_long_vectored(ctx: ShoalContext, state: PgasState,
@@ -242,8 +297,10 @@ def put_long_vectored(ctx: ShoalContext, state: PgasState,
                       dst_addrs, *, handler=hd.H_WRITE, token=0,
                       asynchronous: bool = False) -> PgasState:
     """Vectored Long put: ``blocks[i]`` lands at ``dst_addrs[i]``.  One
-    AM on the wire (blocks concatenated); the receiver scatters.  Block
-    sizes are static; addresses may be traced."""
+    AM on the wire: the destination address list rides inside the fused
+    packet as an extra int32 section (``header ++ addrs ++ payload``),
+    so the whole message is a single collective; the receiver scatters.
+    Block sizes are static; addresses may be traced."""
     nwords = sum(int(b.size) for b in blocks)
     payload = jnp.concatenate([b.reshape(-1) for b in blocks])
     t = am.make_type(am.LONG, asynchronous=asynchronous, fifo=True, vectored=True)
@@ -252,10 +309,12 @@ def put_long_vectored(ctx: ShoalContext, state: PgasState,
                     nblocks=len(blocks))
     hdr = _mask_nonparticipants(ctx, pattern, hdr)
     buf = gc.egress(ctx, state, am.decode(hdr), payload, nwords)
-    hdr_r, pay_r = _exchange(ctx, pattern, hdr, buf)
+    state = gc.dataclasses_replace(
+        state, tx_words=state.tx_words +
+        jnp.where(_is_sender(ctx, pattern), nwords, 0))
+    addrs = jnp.asarray(dst_addrs, jnp.int32)
+    hdr_r, addrs_r, pay_r = _exchange(ctx, pattern, hdr, buf, extra=addrs)
     h = am.decode(hdr_r)
-    addrs_r = lax.ppermute(jnp.asarray(dst_addrs, jnp.int32), ctx.axes, pattern) \
-        if any(s != d for s, d in pattern) else jnp.asarray(dst_addrs, jnp.int32)
     off = 0
     for i, b in enumerate(blocks):
         w = int(b.size)
@@ -279,51 +338,53 @@ def get_medium(ctx: ShoalContext, state: PgasState, pattern: Pattern,
     """Medium get: fetch ``nwords`` at ``src_addr`` in the *destination*
     kernel's segment, delivered to the requesting kernel.  Returns
     ``(state, data)``.  The data return doubles as the reply (credits
-    bump on receipt)."""
-    limit = ctx.transport.max_packet_words
-    parts = []
-    for off, w in _segments(nwords, limit):
-        t = am.make_type(am.MEDIUM, get=True)
-        hdr = am.encode(type=t, src=ctx.my_id(), dst=_dst_of(ctx, pattern),
-                        nwords=w, src_addr=src_addr + off, token=token)
-        hdr = _mask_nonparticipants(ctx, pattern, hdr)
-        hdr_r, _ = _exchange(ctx, pattern, hdr, None)
-        state, resp_hdr, data = gc.serve_get(ctx, state, am.decode(hdr_r), w)
-        back_hdr, back_data = _exchange(ctx, _reverse(pattern), resp_hdr, data)
-        hb = am.decode(back_hdr)
-        state = gc.ingress_reply(state, hb)
-        state, part = gc.ingress_medium(state, hb, back_data, w)
-        parts.append(part)
-    data = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
-    return state, data
+    bump ONCE per message, on the final segment).  >MTU gets batch all
+    request headers into one collective and the whole response into a
+    second: 2 link traversals regardless of segment count."""
+    segs = _segments(nwords, ctx.transport.max_packet_words)
+    nseg, W = len(segs), segs[0][1]
+    offs = jnp.asarray([o for o, _ in segs], jnp.int32)
+    ws = jnp.asarray([w for _, w in segs], jnp.int32)
+    hdrs = am.encode_batch(
+        nseg, type=am.make_type(am.MEDIUM, get=True),
+        src=ctx.my_id(), dst=_dst_of(ctx, pattern), nwords=ws,
+        src_addr=src_addr + offs, token=token, seq=offs)
+    hdrs = _mask_nonparticipants(ctx, pattern, hdrs)
+    hdr_r, _ = _exchange(ctx, pattern, hdrs, None)
+    state, resp_rows, data_rows = gc.serve_get_batch(ctx, state, hdr_r, W)
+    back_hdr, back_data = _exchange(ctx, _reverse(pattern), resp_rows,
+                                    data_rows)
+    state = gc.ingress_reply(state, am.decode(back_hdr[-1]))
+    state, data = gc.ingress_medium_batch(state, back_hdr, back_data, W)
+    return state, data[:nwords]
 
 
 def get_long(ctx: ShoalContext, state: PgasState, pattern: Pattern,
              src_addr, nwords: int, dst_addr, *, handler=hd.H_WRITE,
              token=0) -> PgasState:
     """Long get: fetch remote segment words into the *local* segment at
-    ``dst_addr`` (one-sided read)."""
-    limit = ctx.transport.max_packet_words
-    for off, w in _segments(nwords, limit):
-        t = am.make_type(am.LONG, get=True)
-        hdr = am.encode(type=t, src=ctx.my_id(), dst=_dst_of(ctx, pattern),
-                        nwords=w, src_addr=src_addr + off,
-                        dst_addr=dst_addr + off, token=token, handler=handler)
-        hdr = _mask_nonparticipants(ctx, pattern, hdr)
-        hdr_r, _ = _exchange(ctx, pattern, hdr, None)
-        state, resp_hdr, data = gc.serve_get(ctx, state, am.decode(hdr_r), w)
-        back_hdr, back_data = _exchange(ctx, _reverse(pattern), resp_hdr, data)
-        hb = am.decode(back_hdr)
-        state = gc.ingress_reply(state, hb)
-        # land in local segment through the handler (class LONG on the wire)
-        land = am.Header(
-            type=jnp.where(hb.flag(am.FLAG_REPLY), jnp.asarray(am.LONG), jnp.asarray(am.NOP)).astype(jnp.int32),
-            src=hb.src, dst=hb.dst, nwords=hb.nwords, dst_addr=hb.dst_addr,
-            src_addr=hb.src_addr, handler=hb.handler, token=hb.token,
-            stride=hb.stride, blk_words=hb.blk_words, nblocks=hb.nblocks,
-            seq=hb.seq)
-        state = gc.ingress_long(ctx, state, land, back_data, w)
-    return state
+    ``dst_addr`` (one-sided read).  Same batched 2-traversal wire plan
+    as :func:`get_medium`; one credit per message."""
+    segs = _segments(nwords, ctx.transport.max_packet_words)
+    nseg, W = len(segs), segs[0][1]
+    offs = jnp.asarray([o for o, _ in segs], jnp.int32)
+    ws = jnp.asarray([w for _, w in segs], jnp.int32)
+    hdrs = am.encode_batch(
+        nseg, type=am.make_type(am.LONG, get=True),
+        src=ctx.my_id(), dst=_dst_of(ctx, pattern), nwords=ws,
+        src_addr=src_addr + offs, dst_addr=dst_addr + offs,
+        token=token, handler=handler, seq=offs)
+    hdrs = _mask_nonparticipants(ctx, pattern, hdrs)
+    hdr_r, _ = _exchange(ctx, pattern, hdrs, None)
+    state, resp_rows, data_rows = gc.serve_get_batch(ctx, state, hdr_r, W)
+    back_hdr, back_data = _exchange(ctx, _reverse(pattern), resp_rows,
+                                    data_rows)
+    state = gc.ingress_reply(state, am.decode(back_hdr[-1]))
+    # land in local segment through the handler (class LONG on the wire)
+    is_rep = (back_hdr[:, 0] & am.FLAG_REPLY) != 0
+    land_rows = back_hdr.at[:, 0].set(
+        jnp.where(is_rep, am.LONG, am.NOP).astype(jnp.int32))
+    return gc.ingress_long_batch(ctx, state, land_rows, back_data, W)
 
 
 # --------------------------------------------------------------------------
@@ -343,10 +404,12 @@ def barrier(ctx: ShoalContext, state: PgasState) -> PgasState:
 def wait_replies(ctx: ShoalContext, state: PgasState, token, n) -> PgasState:
     """Wait for ``n`` replies on ``token`` then consume them.
 
-    In SPMD dataflow, arrival is guaranteed by data dependence, so this
-    is bookkeeping: it drains ``n`` credits and raises a sticky error
-    bit if fewer than ``n`` were present — the observable equivalent of
-    a hang in the threaded original (tests assert on it).
+    Replies coalesce across >MTU segmentation, so ``n`` counts
+    *messages*, not packets.  In SPMD dataflow, arrival is guaranteed by
+    data dependence, so this is bookkeeping: it drains ``n`` credits and
+    raises a sticky error bit if fewer than ``n`` were present — the
+    observable equivalent of a hang in the threaded original (tests
+    assert on it).
     """
     token = jnp.clip(jnp.asarray(token, jnp.int32), 0, hd.NUM_TOKENS - 1)
     have = state.credits[token]

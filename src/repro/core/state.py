@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.runtime.jax_compat import shard_map
+
 from repro.core import handlers as hd
 from repro.runtime.transport import Transport, TCP
 
@@ -93,6 +95,6 @@ class ShoalContext:
         from jax.sharding import PartitionSpec as P
 
         spec = P(self.axes) if state_spec is None else state_spec
-        return jax.shard_map(
+        return shard_map(
             fn, mesh=self.mesh, in_specs=spec, out_specs=spec, **shard_map_kwargs
         )

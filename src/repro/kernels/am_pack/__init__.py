@@ -1,4 +1,6 @@
 from repro.kernels.am_pack.ops import am_pack, am_unpack
-from repro.kernels.am_pack.ref import am_pack_ref, am_unpack_ref
+from repro.kernels.am_pack.ref import (am_pack_ref, am_unpack_ref,
+                                       strided_indices)
 
-__all__ = ["am_pack", "am_unpack", "am_pack_ref", "am_unpack_ref"]
+__all__ = ["am_pack", "am_unpack", "am_pack_ref", "am_unpack_ref",
+           "strided_indices"]

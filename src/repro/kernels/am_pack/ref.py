@@ -3,18 +3,28 @@
 import jax.numpy as jnp
 
 
+def strided_indices(addr, stride, blk_words: int, nblocks: int) -> jnp.ndarray:
+    """Flat ``(nblocks * blk_words,)`` gather/scatter index map for a
+    strided region: lane ``i*blk_words + j`` maps to ``addr + i*stride + j``.
+
+    ``addr`` and ``stride`` may be traced; the block geometry is static.
+    Shared by the pack/unpack oracles here and by the GAScore's
+    vectorized strided ingress (:mod:`repro.core.gascore`).
+    """
+    idx = (addr + stride * jnp.arange(nblocks)[:, None]
+           + jnp.arange(blk_words)[None, :])
+    return idx.reshape(-1)
+
+
 def am_pack_ref(segment: jnp.ndarray, addr: int, stride: int,
                 blk_words: int, nblocks: int) -> jnp.ndarray:
     """Gather ``nblocks`` blocks of ``blk_words`` at addr + i*stride from
     a 1-D segment into a contiguous payload."""
-    idx = (addr + stride * jnp.arange(nblocks)[:, None]
-           + jnp.arange(blk_words)[None, :])
-    return segment[idx.reshape(-1)]
+    return segment[strided_indices(addr, stride, blk_words, nblocks)]
 
 
 def am_unpack_ref(segment: jnp.ndarray, payload: jnp.ndarray, addr: int,
                   stride: int, blk_words: int, nblocks: int) -> jnp.ndarray:
     """Scatter a packed payload back at addr + i*stride."""
-    idx = (addr + stride * jnp.arange(nblocks)[:, None]
-           + jnp.arange(blk_words)[None, :])
-    return segment.at[idx.reshape(-1)].set(payload)
+    idx = strided_indices(addr, stride, blk_words, nblocks)
+    return segment.at[idx].set(payload)

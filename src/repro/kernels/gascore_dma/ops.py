@@ -5,6 +5,8 @@ from __future__ import annotations
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro.runtime.jax_compat import shard_map
+
 from repro.kernels.gascore_dma.gascore_dma import ring_allreduce_dma_local
 
 
@@ -19,5 +21,5 @@ def ring_allreduce_dma(mesh, axis_name: str, x, *, interpret: bool = True):
         return ring_allreduce_dma_local(xl, axis_name=axis_name, n=n,
                                         interpret=interpret)
 
-    return jax.shard_map(body, mesh=mesh, in_specs=P(axis_name),
+    return shard_map(body, mesh=mesh, in_specs=P(axis_name),
                          out_specs=P(axis_name), check_vma=False)(x)

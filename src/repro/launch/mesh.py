@@ -7,8 +7,7 @@ flag before first JAX init).
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.runtime.jax_compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -20,7 +19,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+    return make_mesh(shape, axes)
 
 
 def dp_axes_of(mesh) -> tuple[str, ...]:

@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.runtime.jax_compat import shard_map
+
 from repro.models import attention as attn
 from repro.models import blocks as bl
 from repro.models import moe as moe_lib
@@ -387,6 +389,17 @@ class Model:
     def _constrain(self, x, spec):
         if self.mesh is None:
             return x
+        # Inside a fully-manual shard_map region (old-jax compat path)
+        # sharding hints over the manual axes are illegal and
+        # meaningless — the data is already placed.  Skip them there.
+        from repro.runtime.jax_compat import bound_axis_names
+        bound = bound_axis_names()
+        if bound:
+            def touches_bound(a):
+                axes = a if isinstance(a, tuple) else (a,)
+                return any(x in bound for x in axes)
+            if any(a is not None and touches_bound(a) for a in spec):
+                return x
         return jax.lax.with_sharding_constraint(
             x, jax.sharding.NamedSharding(self.mesh, spec))
 
@@ -425,7 +438,7 @@ class Model:
         # a2a/rs dispatch want tokens sequence-sharded over the model axis
         # at the island boundary; psum wants them replicated over it.
         seq = m if cfg.moe.dispatch in ("a2a", "rs") else None
-        smapped = jax.shard_map(
+        smapped = shard_map(
             island, mesh=self.mesh,
             in_specs=(routed_spec, P(self.dp_axes, seq, None)),
             out_specs=(P(self.dp_axes, seq, None), P()),

@@ -27,6 +27,8 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.runtime.jax_compat import shard_map
+
 
 def _block_attend(q, k, v, q_pos, k_pos, scale):
     """Partial attention of a q block against one k/v block.
@@ -95,7 +97,7 @@ def ring_attention(mesh, seq_axis: str, dp_axes: tuple, q, k, v, positions,
     qspec = P(dp_axes, seq_axis, None, None, None)
     kspec = P(dp_axes, seq_axis, None, None)
     pspec = P(dp_axes, seq_axis)
-    return jax.shard_map(fn, mesh=mesh,
+    return shard_map(fn, mesh=mesh,
                          in_specs=(qspec, kspec, kspec, pspec, pspec),
                          out_specs=qspec, check_vma=False)(
         q, k, v, positions, positions)

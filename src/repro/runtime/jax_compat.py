@@ -1,0 +1,63 @@
+"""Version-compatibility shims over the JAX public API.
+
+The library targets current JAX (``jax.shard_map``, ``jax.sharding.AxisType``,
+``jax.make_mesh(..., axis_types=...)``) but must also run on older releases
+where those names live under ``jax.experimental`` or do not exist.  Every
+module that needs one of these symbols imports it from here instead of
+probing ``jax`` itself.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+
+if hasattr(jax, "shard_map"):  # jax >= 0.6
+    shard_map = jax.shard_map
+else:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                  check_vma=None, **kw):
+        """Adapter onto the pre-0.6 experimental API: ``check_vma`` was
+        called ``check_rep``.  ``axis_names`` (partial-manual mode) is
+        accepted but *ignored* — the region runs fully manual, because
+        the old partial-auto lowering hits "PartitionId is not
+        supported" on the CPU SPMD partitioner.  Correctness is
+        unchanged (unnamed axes just replicate instead of GSPMD-auto
+        sharding)."""
+        if check_vma is not None:
+            kw.setdefault("check_rep", check_vma)
+        return _exp_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kw)
+
+
+def bound_axis_names() -> frozenset:
+    """Mesh axis names currently bound as *manual* axes (i.e. we are
+    tracing inside a ``shard_map``/``pmap`` region over them).  Empty on
+    jax >= 0.6, where partial-manual mode tracks this itself and nested
+    sharding annotations over auto axes are legal."""
+    if hasattr(jax, "shard_map"):
+        return frozenset()
+    try:  # pragma: no cover - old-jax introspection
+        from jax._src import core as _core
+        env = _core.get_axis_env()
+        return frozenset(n for n in env.axis_sizes if isinstance(n, str))
+    except Exception:  # pragma: no cover
+        return frozenset()
+
+
+def make_mesh(shape: Sequence[int], names: Sequence[str]) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with explicit Auto axis types where supported
+    (silences the 0.9 deprecation); plain mesh on older releases."""
+    if AxisType is not None:
+        return jax.make_mesh(
+            tuple(shape), tuple(names), axis_types=(AxisType.Auto,) * len(shape)
+        )
+    return jax.make_mesh(tuple(shape), tuple(names))

@@ -15,7 +15,8 @@ from typing import Sequence
 
 import jax
 import numpy as np
-from jax.sharding import AxisType
+
+from repro.runtime.jax_compat import make_mesh as _compat_make_mesh
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,9 +68,7 @@ class ClusterSpec:
 
 def make_mesh(shape: Sequence[int], names: Sequence[str]) -> jax.sharding.Mesh:
     """Build a mesh with explicit Auto axis types (silences 0.9 deprecation)."""
-    return jax.make_mesh(
-        tuple(shape), tuple(names), axis_types=(AxisType.Auto,) * len(shape)
-    )
+    return _compat_make_mesh(shape, names)
 
 
 def make_cpu_mesh(n: int | None = None, names: tuple[str, ...] = ("kernel",)):

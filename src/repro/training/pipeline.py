@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.runtime.jax_compat import shard_map
+
 
 def pipeline_apply(mesh, axis: str, stage_fn, stage_params, mbs):
     """Run ``mbs`` (M, mb, ...) microbatches through n_stages stages.
@@ -64,7 +66,7 @@ def pipeline_apply(mesh, axis: str, stage_fn, stage_params, mbs):
         out = coll.broadcast_from(valid, axis, n, root=n - 1)
         return out[None]
 
-    fn = jax.shard_map(
+    fn = shard_map(
         per_device, mesh=mesh,
         in_specs=(P(axis), P()), out_specs=P(axis),
         check_vma=False)

@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.runtime.jax_compat import shard_map
+
 from repro.core import collectives as coll
 from repro.models.model import Model
 from repro.optim import adamw as aw
@@ -212,7 +214,7 @@ class Trainer:
             # model axis stays GSPMD-auto.  P() / P(dp) are prefix specs
             # broadcast over the pytrees.
             batch_specs = {k: P(dp) for k in batch}
-            fn = jax.shard_map(
+            fn = shard_map(
                 local_step, mesh=mesh,
                 in_specs=(P(), batch_specs),
                 out_specs=(P(), P()),

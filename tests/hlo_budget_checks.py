@@ -1,0 +1,111 @@
+"""Collective-budget regression checks for the fused wire format.
+
+Run by tests/test_collective_budget.py in a subprocess with 8 host
+devices.  Compiles (never executes) the hot AM programs and counts
+``collective-permute`` ops in the optimized HLO via
+:mod:`repro.launch.hlo_analysis` — the wire cost is a *measured*
+property of the compiled program, not a belief:
+
+* acked >MTU ``put_long`` (nseg = 4): must fit the ``nseg + 1`` budget
+  the fused format guarantees (and actually compiles to 2: one batched
+  packet stack + one coalesced reply, down from 3 * nseg = 12 in the
+  header/payload/reply-per-segment model);
+* async >MTU ``put_long``: 1;
+* >MTU ``get_medium``: 2 (batched request stack + batched response);
+* ``put_long_vectored``: 2 (addresses ride inside the fused packet);
+* one full Jacobi iteration with both halo rows segmenting: 4 puts'
+  worth of traffic in 2 * 2 collectives.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops
+from repro.core.address_space import GlobalAddressSpace
+from repro.core.state import ShoalContext
+from repro.launch.hlo_analysis import parse_collectives
+from repro.runtime import TCP, UDP
+from repro.runtime.topology import make_cpu_mesh
+
+N = 8
+RING = [(i, (i + 1) % N) for i in range(N)]
+TINY_TCP = dataclasses.replace(TCP, max_packet_bytes=64)   # 16 words
+TINY_UDP = dataclasses.replace(UDP, max_packet_bytes=64)
+NSEG = 4                                                   # 50 words / 16
+
+
+def cp_count(gas, prog, *extra):
+    state0 = gas.make_global_state()
+    hlo = jax.jit(gas.spmd(prog)).lower(state0, *extra).compile().as_text()
+    return parse_collectives(hlo).ops.get("collective-permute", 0.0)
+
+
+def check(name, got, budget, expect=None):
+    assert got <= budget, f"{name}: {got} collective-permutes > budget {budget}"
+    if expect is not None:
+        assert got == expect, f"{name}: {got} collective-permutes != {expect}"
+    print(f"[hlo-budget] {name}: {got:.0f} <= {budget} ok")
+
+
+def main():
+    mesh = make_cpu_mesh(N, ("kernel",))
+
+    ctx = ShoalContext(mesh=mesh, axes=("kernel",), transport=TINY_TCP,
+                       segment_words=128)
+    gas = GlobalAddressSpace(ctx)
+
+    def put_acked(st):
+        pay = jnp.arange(50, dtype=jnp.float32)
+        st = ops.put_long(ctx, st, pay, RING, dst_addr=8, token=1)
+        return ops.wait_replies(ctx, st, token=1, n=1)
+
+    check("put_long/acked/4seg", cp_count(gas, put_acked),
+          budget=NSEG + 1, expect=2)
+
+    def get4(st):
+        st, data = ops.get_medium(ctx, st, RING, src_addr=0, nwords=50,
+                                  token=2)
+        return ops.wait_replies(ctx, st, token=2, n=1)
+
+    check("get_medium/4seg", cp_count(gas, get4), budget=NSEG + 1, expect=2)
+
+    def vectored(st):
+        return ops.put_long_vectored(
+            ctx, st, [jnp.ones(2, jnp.float32), jnp.ones(3, jnp.float32)],
+            RING, dst_addrs=[40, 60], token=3)
+
+    check("put_long_vectored", cp_count(gas, vectored), budget=2, expect=2)
+
+    ctx_u = ShoalContext(mesh=mesh, axes=("kernel",), transport=TINY_UDP,
+                         segment_words=128)
+    gas_u = GlobalAddressSpace(ctx_u)
+
+    def put_async(st):
+        pay = jnp.arange(50, dtype=jnp.float32)
+        return ops.put_long(ctx_u, st, pay, RING, dst_addr=8, token=1,
+                            asynchronous=True)
+
+    check("put_long/async/4seg", cp_count(gas_u, put_async),
+          budget=NSEG, expect=1)
+
+    # one full Jacobi iteration with segmenting halo rows: n=64 grid on
+    # 8 kernels, 16-word MTU -> each 64-word halo row is 4 packets; two
+    # halo messages/iteration -> 2 * (1 packet stack + 1 reply) = 4.
+    from repro.apps.jacobi import JacobiApp
+    app = JacobiApp(n=64, kernels=N, iters=1, transport=TINY_TCP)
+    fn = app.build()
+    gas_j = GlobalAddressSpace(app.ctx)
+    st = gas_j.make_global_state()
+    blocks = jnp.zeros((N, 64 // N, 64), jnp.float32)
+    hlo = fn.lower(st, blocks).compile().as_text()
+    got = parse_collectives(hlo).ops.get("collective-permute", 0.0)
+    check("jacobi-iter/64x8/segmenting-halos", got,
+          budget=2 * (NSEG + 1), expect=4)
+
+    print("HLO_BUDGET_OK")
+
+
+if __name__ == "__main__":
+    main()

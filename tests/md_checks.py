@@ -12,6 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.runtime.jax_compat import make_mesh as compat_make_mesh, shard_map
+
 from repro.core import collectives as coll
 from repro.core import handlers as hd
 from repro.core import humboldt, ops
@@ -135,8 +137,9 @@ def test_mtu_segmentation():
         me1 = (ctx.my_id() + 1).astype(jnp.float32)
         pay = jnp.arange(50, dtype=jnp.float32) + 100 * me1
         st = ops.put_long(ctx, st, pay, RING, dst_addr=8, token=1)
-        # 50 words / 16-word packets -> 4 packets -> 4 replies
-        st = ops.wait_replies(ctx, st, token=1, n=4)
+        # 50 words / 16-word packets -> 4 packets, ONE coalesced reply:
+        # only the final segment of a message is acked
+        st = ops.wait_replies(ctx, st, token=1, n=1)
         return st
 
     st = jax.jit(gas.spmd(prog))(gas.make_global_state())
@@ -144,7 +147,86 @@ def test_mtu_segmentation():
     for k in range(N):
         src1 = ((k - 1) % N) + 1
         np.testing.assert_allclose(seg[k, 8:58], np.arange(50) + 100 * src1)
-    assert (np.asarray(st.error) == 0).all(), "expected exactly 4 replies"
+    assert (np.asarray(st.error) == 0).all(), \
+        "expected one coalesced reply per message"
+
+
+def test_mtu_segmentation_edge():
+    check(">MTU put flush against the segment end (partial final packet)")
+    mesh = make_cpu_mesh(N, ("kernel",))
+    import dataclasses
+    tiny_tcp = dataclasses.replace(TCP, max_packet_bytes=64)   # 16 words
+    ctx = ShoalContext(mesh=mesh, axes=("kernel",), transport=tiny_tcp,
+                       segment_words=128)
+    gas = GlobalAddressSpace(ctx)
+
+    def prog(st):
+        me1 = (ctx.my_id() + 1).astype(jnp.float32)
+        pay = jnp.arange(50, dtype=jnp.float32) + 100 * me1
+        # 78 + 50 = 128: the partial 2-word final packet lands flush
+        # against the segment end
+        st = ops.put_long(ctx, st, pay, RING, dst_addr=78, token=1)
+        st = ops.wait_replies(ctx, st, token=1, n=1)
+        return st
+
+    st = jax.jit(gas.spmd(prog))(gas.make_global_state())
+    seg = np.asarray(st.segment)
+    for k in range(N):
+        src1 = ((k - 1) % N) + 1
+        np.testing.assert_allclose(seg[k, 78:128], np.arange(50) + 100 * src1)
+    assert (np.asarray(st.error) == 0).all()
+
+
+def test_mtu_gets_and_strided():
+    check(">MTU get_medium / get_long / put_long_strided (batched plans)")
+    mesh = make_cpu_mesh(N, ("kernel",))
+    import dataclasses
+    tiny_tcp = dataclasses.replace(TCP, max_packet_bytes=64)   # 16 words
+    ctx = ShoalContext(mesh=mesh, axes=("kernel",), transport=tiny_tcp,
+                       segment_words=256)
+    gas = GlobalAddressSpace(ctx)
+
+    def prog(st):
+        from repro.core.gascore import dataclasses_replace
+        me1 = (ctx.my_id() + 1).astype(jnp.float32)
+        # seed my own segment [0, 50) with a recognizable ramp
+        ramp = jnp.arange(50, dtype=jnp.float32) + 100 * me1
+        st = dataclasses_replace(
+            st, segment=jax.lax.dynamic_update_slice(st.segment, ramp, (0,)))
+        # 50-word get_medium: 4 request packets, one batched response,
+        # ONE credit for the whole message
+        st, data = ops.get_medium(ctx, st, RING, src_addr=0, nwords=50,
+                                  token=2)
+        st = ops.wait_replies(ctx, st, token=2, n=1)
+        st = dataclasses_replace(
+            st, segment=jax.lax.dynamic_update_slice(st.segment, data, (60,)))
+        # 50-word get_long into my segment at 120
+        st = ops.get_long(ctx, st, RING, src_addr=0, nwords=50, dst_addr=120,
+                          token=3)
+        st = ops.wait_replies(ctx, st, token=3, n=1)
+        # strided put: 10 blocks of 3 words, stride 5 -> lands at
+        # 180 + i*5; 30 words > 16-word MTU so it segments at block
+        # granularity (5 blocks per packet, 2 packets, one reply)
+        pay = jnp.arange(30, dtype=jnp.float32) + 1000 * me1
+        st = ops.put_long_strided(ctx, st, pay, RING, dst_addr=180, stride=5,
+                                  blk_words=3, nblocks=10, token=4)
+        st = ops.wait_replies(ctx, st, token=4, n=1)
+        return st
+
+    st = jax.jit(gas.spmd(prog))(gas.make_global_state())
+    seg = np.asarray(st.segment)
+    for k in range(N):
+        succ1 = ((k + 1) % N) + 1      # gets fetch from my successor
+        pred1 = ((k - 1) % N) + 1      # strided put arrives from predecessor
+        np.testing.assert_allclose(seg[k, 60:110],
+                                   np.arange(50) + 100 * succ1)
+        np.testing.assert_allclose(seg[k, 120:170],
+                                   np.arange(50) + 100 * succ1)
+        for i in range(10):
+            np.testing.assert_allclose(
+                seg[k, 180 + 5 * i:183 + 5 * i],
+                np.arange(3) + 3 * i + 1000 * pred1)
+    assert (np.asarray(st.error) == 0).all()
 
 
 def test_async_udp_semantics():
@@ -197,7 +279,7 @@ def test_ring_collectives():
     def ar(x):
         return coll.ring_all_reduce(x, ("kernel",), N)
 
-    out = jax.jit(jax.shard_map(ar, mesh=mesh, in_specs=P("kernel"),
+    out = jax.jit(shard_map(ar, mesh=mesh, in_specs=P("kernel"),
                                 out_specs=P("kernel")))(xs)
     np.testing.assert_allclose(np.asarray(out),
                                np.tile(np.asarray(xs).sum(0), (N, 1)),
@@ -208,7 +290,7 @@ def test_ring_collectives():
 
     xs2 = jnp.asarray(np.random.default_rng(1).standard_normal((N, 40)),
                       jnp.float32)
-    out = jax.jit(jax.shard_map(rs, mesh=mesh, in_specs=P("kernel"),
+    out = jax.jit(shard_map(rs, mesh=mesh, in_specs=P("kernel"),
                                 out_specs=P("kernel")))(xs2)
     np.testing.assert_allclose(np.asarray(out).reshape(N, 5),
                                np.asarray(xs2).sum(0).reshape(N, 5), rtol=1e-5)
@@ -216,7 +298,7 @@ def test_ring_collectives():
     def bc(x):
         return coll.broadcast_from(x, ("kernel",), N, root=5)
 
-    out = jax.jit(jax.shard_map(bc, mesh=mesh, in_specs=P("kernel"),
+    out = jax.jit(shard_map(bc, mesh=mesh, in_specs=P("kernel"),
                                 out_specs=P("kernel")))(xs)
     np.testing.assert_allclose(np.asarray(out),
                                np.tile(np.asarray(xs)[5], (N, 1)))
@@ -230,8 +312,7 @@ def test_trainer_backends_agree():
     from repro.data.pipeline import DataConfig, TokenPipeline
 
     mesh = make_cpu_mesh(N, ("kernel",))
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((2, 4), ("data", "model"))
     cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
                       n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
                       dtype=jnp.float32)
@@ -272,7 +353,7 @@ def test_trainer_backends_agree():
         return out["g"], n_live
     g = jnp.asarray(np.arange(2 * 3, dtype=np.float32).reshape(2, 3))
     live = jnp.asarray([1.0, 0.0])
-    out, n_live = jax.jit(jax.shard_map(
+    out, n_live = jax.jit(shard_map(
         qfn, mesh=mesh, in_specs=(P("data"), P("data")),
         out_specs=(P("data"), P("data", None)) if False else (P("data"), P("data"))))(g, live)
     np.testing.assert_allclose(np.asarray(out)[0], np.asarray(g)[0])
@@ -282,8 +363,7 @@ def test_trainer_backends_agree():
 def test_elastic_reshard():
     check("checkpoint save on 8-way mesh, restore on 4-way mesh")
     from repro.checkpoint import CheckpointManager
-    mesh8 = jax.make_mesh((8,), ("data",),
-                          axis_types=(jax.sharding.AxisType.Auto,))
+    mesh8 = compat_make_mesh((8,), ("data",))
     x = jnp.arange(64.0).reshape(8, 8)
     xs = jax.device_put(x, NamedSharding(mesh8, P("data", None)))
     with tempfile.TemporaryDirectory() as d:
@@ -303,8 +383,7 @@ def test_ring_attention_exact():
     check("ring attention (seq-parallel, one-sided-put KV rotation)")
     from repro.models.ring_attention import ring_attention
     from repro.models.attention import _attend
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((2, 4), ("data", "model"))
     rng = np.random.default_rng(0)
     B, S, K, G, dh = 2, 64, 2, 3, 16
     q = jnp.asarray(rng.standard_normal((B, S, K, G, dh)), jnp.float32)
@@ -322,8 +401,7 @@ def test_seq_shard_model_exact():
     check("seq_shard (ring) model forward+grad vs baseline")
     import dataclasses
     from repro.models.model import ModelConfig, build_model
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((2, 4), ("data", "model"))
     cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
                       n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
                       dtype=jnp.float32, tp=False, seq_shard=True)
@@ -348,8 +426,7 @@ def test_moe_dispatch_variants_exact():
     import dataclasses
     from repro.models.model import ModelConfig, build_model
     from repro.models.moe import MoEDims
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((2, 4), ("data", "model"))
     base = MoEDims(n_experts=8, top_k=2, d_ff_expert=64, n_shared=1,
                    capacity_factor=16.0)
     toks = jnp.asarray(np.random.default_rng(0).integers(0, 128, (4, 32)),
@@ -374,8 +451,7 @@ def test_moe_dispatch_variants_exact():
 def test_gascore_rdma_ring():
     check("Pallas RDMA ring all-reduce (the literal GAScore) vs psum")
     from repro.kernels.gascore_dma import ring_allreduce_dma
-    mesh = jax.make_mesh((8,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat_make_mesh((8,), ("x",))
     for chunk, dt, tol in [(128, jnp.float32, 1e-5), (64, jnp.bfloat16, 5e-2)]:
         x = jnp.asarray(np.random.default_rng(0).standard_normal(8 * chunk),
                         dt)
@@ -389,8 +465,7 @@ def test_gascore_rdma_ring():
 def test_pipeline_parallel():
     check("2-stage pipeline over the pod axis (Medium-AM handoffs)")
     from repro.training.pipeline import pipeline_apply, split_stages
-    mesh = jax.make_mesh((2, 4), ("pod", "chip"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((2, 4), ("pod", "chip"))
     rng = np.random.default_rng(0)
     L, d = 4, 16
     w = jnp.asarray(rng.standard_normal((L, d, d)) * 0.3, jnp.float32)
@@ -419,6 +494,8 @@ def main():
     test_accumulate_and_get()
     test_strided_vectored()
     test_mtu_segmentation()
+    test_mtu_segmentation_edge()
+    test_mtu_gets_and_strided()
     test_async_udp_semantics()
     test_humboldt_two_sided()
     test_ring_collectives()

@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import am
 
@@ -66,3 +66,69 @@ def test_header_width():
     hdr = am.encode(type=am.make_type(am.SHORT))
     assert hdr.shape == (am.HDR_WORDS,)
     assert hdr.dtype == jnp.int32
+
+
+# -- fused packets ------------------------------------------------------------
+
+def test_fused_packet_roundtrip_bit_exact():
+    """header ++ payload fuse into ONE int32 packet and split back
+    bit-exactly — even for payload bit patterns that are NaNs/denormals
+    as float32 (bitcast, not value conversion)."""
+    rng = np.random.default_rng(0)
+    bits = rng.integers(0, 2**32, size=37, dtype=np.uint32)
+    pay = jnp.asarray(bits.view(np.float32))
+    hdr = am.encode(type=am.make_type(am.LONG, fifo=True), src=1, dst=2,
+                    nwords=37, dst_addr=11, token=3)
+    pkt = am.pack_packet(hdr, pay)
+    assert pkt.dtype == jnp.int32
+    assert pkt.shape == (am.HDR_WORDS + 37,)
+    h2, p2 = am.unpack_packet(pkt, pay.dtype)
+    np.testing.assert_array_equal(np.asarray(h2), np.asarray(hdr))
+    assert np.asarray(p2).tobytes() == np.asarray(pay).tobytes()
+
+
+def test_fused_packet_extra_section():
+    """Vectored AMs carry their address list as an int32 extra section
+    between header and payload: header ++ addrs ++ payload."""
+    pay = jnp.asarray([1.5, -2.25, 3.0], jnp.float32)
+    addrs = jnp.asarray([50, 60, 70], jnp.int32)
+    hdr = am.encode(type=am.make_type(am.LONG, vectored=True), nwords=3,
+                    nblocks=3)
+    pkt = am.pack_packet(hdr, pay, extra=addrs)
+    assert pkt.shape == (am.HDR_WORDS + 3 + 3,)
+    h2, e2, p2 = am.unpack_packet(pkt, pay.dtype, n_extra=3)
+    np.testing.assert_array_equal(np.asarray(h2), np.asarray(hdr))
+    np.testing.assert_array_equal(np.asarray(e2), np.asarray(addrs))
+    np.testing.assert_array_equal(np.asarray(p2), np.asarray(pay))
+
+
+def test_fused_packet_batched_rows():
+    """A segmentation plan fuses row-wise: (nseg, HDR + W) int32."""
+    nseg, W = 4, 8
+    hdrs = am.encode_batch(nseg, type=am.make_type(am.LONG),
+                           nwords=jnp.full((nseg,), W), seq=jnp.arange(nseg) * W)
+    pay = jnp.arange(nseg * W, dtype=jnp.float32).reshape(nseg, W)
+    pkt = am.pack_packet(hdrs, pay)
+    assert pkt.shape == (nseg, am.HDR_WORDS + W)
+    h2, p2 = am.unpack_packet(pkt, pay.dtype)
+    np.testing.assert_array_equal(np.asarray(h2), np.asarray(hdrs))
+    np.testing.assert_array_equal(np.asarray(p2), np.asarray(pay))
+
+
+def test_encode_batch_broadcast_and_rows():
+    hdrs = am.encode_batch(3, type=am.make_type(am.MEDIUM), src=7,
+                           nwords=jnp.asarray([16, 16, 2]))
+    assert hdrs.shape == (3, am.HDR_WORDS)
+    for r in range(3):
+        h = am.decode(hdrs[r])
+        assert int(h.src) == 7
+    assert [int(am.decode(hdrs[r]).nwords) for r in range(3)] == [16, 16, 2]
+    with pytest.raises(ValueError):
+        am.encode_batch(2, bogus=1)
+
+
+def test_wire_dtype_guard():
+    assert am.wire_dtype_ok(jnp.float32) and am.wire_dtype_ok(jnp.int32)
+    assert not am.wire_dtype_ok(jnp.bfloat16)
+    with pytest.raises(TypeError):
+        am.to_wire(jnp.zeros((4,), jnp.bfloat16))

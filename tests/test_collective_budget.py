@@ -1,0 +1,13 @@
+"""Regression: the fused single-packet wire format keeps the compiled
+collective budget — ≤ nseg + 1 collective-permutes per acked >MTU AM
+(measured at 2: one batched packet stack + one coalesced reply), down
+from 3·nseg in the header/payload/reply-per-segment model.  Compiled in
+a subprocess with 8 host devices; see tests/hlo_budget_checks.py."""
+
+from conftest import run_subprocess_checks
+
+
+def test_collective_budget():
+    out = run_subprocess_checks("hlo_budget_checks.py", n_devices=8,
+                                timeout=900)
+    assert "HLO_BUDGET_OK" in out

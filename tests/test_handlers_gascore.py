@@ -4,7 +4,7 @@ GAScore stages are pure functions over headers/payloads/state)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import am, gascore as gc, handlers as hd
 from repro.core.state import PgasState, ShoalContext
@@ -143,6 +143,65 @@ def test_egress_memory_sourced():
                               src_addr=8))
     buf = gc.egress(ctx, st_, hdr, None, 4)
     np.testing.assert_allclose(buf, [1, 2, 3, 4])
+
+
+def test_put_calling_conventions_validated():
+    """payload=None with no (from_segment_addr, nwords) is a usage error
+    and must raise a ValueError naming both conventions, not crash with
+    an opaque AttributeError on payload.reshape."""
+    from repro.core import ops
+    ctx = make_ctx()
+    st_ = PgasState.make(64)
+    for op in (lambda: ops.put_medium(ctx, st_, None, [(0, 0)]),
+               lambda: ops.put_long(ctx, st_, None, [(0, 0)], dst_addr=0),
+               lambda: ops.put_medium(ctx, st_, None, [(0, 0)], nwords=4),
+               lambda: ops.put_long(ctx, st_, None, [(0, 0)], dst_addr=0,
+                                    nwords=4)):
+        with pytest.raises(ValueError, match="FIFO|memory-sourced"):
+            op()
+
+
+def test_egress_batch_matches_single():
+    """The batched egress path agrees with per-row egress for both the
+    FIFO and the memory-sourced variants."""
+    ctx = make_ctx(segment_words=64)
+    st_ = PgasState.make(64)
+    st_ = gc.dataclasses_replace(
+        st_, segment=st_.segment.at[:64].set(jnp.arange(64.0)))
+    # memory-sourced rows, incl. a partial final row flush with the end
+    rows = am.encode_batch(3, type=am.make_type(am.LONG), nwords=jnp.asarray([8, 8, 4]),
+                           src_addr=jnp.asarray([44, 52, 60]))
+    out = gc.egress_batch(ctx, st_, rows, None, 8)
+    np.testing.assert_allclose(out[0], np.arange(44.0, 52.0))
+    np.testing.assert_allclose(out[1], np.arange(52.0, 60.0))
+    np.testing.assert_allclose(out[2], [60, 61, 62, 63, 0, 0, 0, 0])
+    # FIFO rows: flat payload split row-wise, last row zero-padded
+    fifo = gc.egress_batch(ctx, st_, rows, jnp.arange(20.0), 8)
+    np.testing.assert_allclose(fifo.reshape(-1)[:20], np.arange(20.0))
+    np.testing.assert_allclose(fifo[2][4:], 0.0)
+
+
+def test_ingress_strided_vectorized_matches_ref():
+    """The flat gather/scatter strided ingress lands blocks exactly
+    where the am_pack oracle's index map says."""
+    from repro.kernels.am_pack import am_unpack_ref
+    ctx = make_ctx(segment_words=64)
+    st_ = PgasState.make(64)
+    pay = jnp.arange(1.0, 7.0)
+    hdr = am.decode(am.encode(type=am.make_type(am.LONG, strided=True),
+                              nwords=6, dst_addr=5, stride=9, blk_words=2,
+                              nblocks=3, handler=hd.H_WRITE))
+    out = gc.ingress_strided(ctx, st_, hdr, pay, 2, 3)
+    want = am_unpack_ref(st_.segment, pay, 5, 9, 2, 3)
+    np.testing.assert_allclose(out.segment, want)
+    # dynamic nblocks below the static capacity: trailing blocks dropped
+    hdr2 = am.decode(am.encode(type=am.make_type(am.LONG, strided=True),
+                               nwords=4, dst_addr=5, stride=9, blk_words=2,
+                               nblocks=2, handler=hd.H_WRITE))
+    out2 = gc.ingress_strided(ctx, st_, hdr2, pay, 2, 3)
+    np.testing.assert_allclose(out2.segment[5:7], [1, 2])
+    np.testing.assert_allclose(out2.segment[14:16], [3, 4])
+    np.testing.assert_allclose(out2.segment[23:25], 0.0)
 
 
 def test_egress_fifo_pads():

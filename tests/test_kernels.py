@@ -2,9 +2,11 @@
 (interpret=True: the kernel body executes on CPU; TPU is the target)."""
 
 import jax.numpy as jnp
+
+from repro.runtime.jax_compat import shard_map
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels.am_pack import am_pack, am_pack_ref, am_unpack, am_unpack_ref
 from repro.kernels.attention import attention_ref, flash_attention
@@ -120,7 +122,7 @@ def test_gascore_dma_single_device_identity():
     from jax.sharding import PartitionSpec as P
     mesh = make_cpu_mesh(1, ("x",))
     x = jnp.asarray(RNG.standard_normal(128), jnp.float32)
-    out = jax.shard_map(
+    out = shard_map(
         lambda v: ring_allreduce_dma_local(v, axis_name="x", n=1),
         mesh=mesh, in_specs=P("x"), out_specs=P("x"), check_vma=False)(x)
     np.testing.assert_allclose(np.asarray(out), np.asarray(x))

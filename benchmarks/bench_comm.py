@@ -15,16 +15,25 @@ the collective budget is a *measured* number, not a belief:
 * ``put_long`` acked, payload = 4 MTUs    (batched: 1 packet + 1 reply)
 * ``put_long`` async, payload = 4 MTUs    (batched: 1 packet)
 * ``get_medium``, payload = 4 MTUs        (1 request + 1 batched response)
+* small-message throughput: 1024 4-word mailbox sends to one
+  destination as ONE flushed packet stack (the actor layer) — the row
+  reports µs per 1k sends; a companion ``mailbox/msgs-per-collective``
+  row reports the aggregation ratio
 * one full Jacobi iteration at grid 4096 / 8 kernels (the paper's
   footnote-2 failing configuration: halo row 4096 words > 2250-word MTU)
 
 CSV: ``name,us_per_call,collective_permutes``.
+
+``BENCH_SMOKE=1`` trims iterations and skips the big Jacobi grid — the
+fast pre-merge mode ``benchmarks/run.py --smoke`` drives to assert the
+collective budgets without the full timing sweep.
 """
 
 import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import ops
 from repro.core.address_space import GlobalAddressSpace
@@ -37,6 +46,8 @@ from benchmarks._timing import time_fn
 
 N = 8
 RING = [(i, (i + 1) % N) for i in range(N)]
+SMOKE = os.environ.get("BENCH_SMOKE") == "1"
+ITERS = 3 if SMOKE else 20
 
 
 def cp_count(fn, *args) -> float:
@@ -44,9 +55,9 @@ def cp_count(fn, *args) -> float:
     return parse_collectives(hlo).ops.get("collective-permute", 0.0)
 
 
-def bench(name, fn, state0, iters=20):
+def bench(name, fn, state0, iters=None):
     jitted = jax.jit(fn)
-    us = time_fn(jitted, state0, iters=iters)
+    us = time_fn(jitted, state0, iters=iters or ITERS)
     cps = cp_count(fn, state0)
     print(f"{name},{us:.1f},{cps:.0f}")
 
@@ -87,6 +98,28 @@ def main():
         return st
 
     bench("comm/get_medium/acked/4seg", gas.spmd(get4), state0)
+
+    # small-message throughput: 1024 4-word sends to the ring neighbor
+    # through one actor mailbox flush (vs 1024 collectives unbatched)
+    n_msgs, w = 1024, 4
+
+    def mailbox1k(st):
+        mb = ctx.mailbox(RING, msg_words=w, watermark=1 << 20, token=5)
+        base = np.arange(w, dtype=np.float32)
+        for i in range(n_msgs):
+            st = mb.send(st, base + i, dst_addr=w * i)
+        st = mb.flush(st)
+        return ops.wait_replies(ctx, st, token=5, n=1)
+
+    fn_mb = gas.spmd(mailbox1k)
+    us = time_fn(jax.jit(fn_mb), state0, iters=max(ITERS, 5), warmup=2)
+    cps = cp_count(fn_mb, state0)
+    print(f"comm/mailbox/1k-4word-sends,{us:.1f},{cps:.0f}")
+    print(f"mailbox/msgs-per-collective,{n_msgs / max(cps, 1):.1f},"
+          f"{cps:.0f} collectives for {n_msgs} sends")
+
+    if SMOKE:
+        return
 
     # one Jacobi iteration, grid 4096 x 8 kernels: halo rows segment 2x
     from repro.apps.jacobi import JacobiApp

@@ -15,6 +15,12 @@ count parsed out of the compiled HLO.  The
 measurements taken immediately *before* the fused single-packet wire
 format landed — while ``current`` is overwritten by every run, so any
 future regression is visible as a diff against both.
+
+``--smoke`` is the fast pre-merge mode driven by ``scripts/ci_check.sh``:
+it runs only ``bench_comm`` (with ``BENCH_SMOKE=1``, few timing iters,
+no big Jacobi grid), asserts every comm row's collective-permute budget
+including the mailbox messages-per-collective floor, and does NOT
+rewrite ``BENCH_comm.json``.
 """
 
 import json
@@ -38,10 +44,12 @@ INPROCESS_BENCHES = ["benchmarks.bench_utilization"]
 _ROW_RE = re.compile(r"^([\w/.+-]+),(-?[\d.]+),(.*)$")
 
 
-def run_sub(mod: str, devices: int):
+def run_sub(mod: str, devices: int, extra_env=None):
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + REPO
+    if extra_env:
+        env.update(extra_env)
     proc = subprocess.run([sys.executable, "-m", mod], env=env,
                           capture_output=True, text=True, cwd=REPO)
     sys.stdout.write(proc.stdout)
@@ -96,7 +104,58 @@ def write_bench_json(rows) -> None:
           f"({len(comm)} comm rows, {len(benches)} bench rows)")
 
 
+# collective-permute ceilings per comm bench row: the measured HLO count
+# must not exceed these, or the fused-wire / mailbox aggregation has
+# regressed.  (floor) rows assert the value is AT LEAST the budget.
+SMOKE_BUDGETS = {
+    "comm/put_long/acked/1seg": 2.0,
+    "comm/put_long/acked/4seg": 2.0,
+    "comm/put_long/async/1seg": 1.0,
+    "comm/put_long/async/4seg": 1.0,
+    "comm/get_medium/acked/4seg": 2.0,
+    "comm/mailbox/1k-4word-sends": 2.0,
+}
+SMOKE_FLOORS = {
+    "mailbox/msgs-per-collective": 512.0,
+}
+
+
+def smoke() -> None:
+    print("name,us_per_call,derived")
+    code, out = run_sub("benchmarks.bench_comm", 8,
+                        extra_env={"BENCH_SMOKE": "1"})
+    if code:
+        raise SystemExit(f"bench_comm failed (rc={code})")
+    rows = {name: (us, derived) for name, us, derived in parse_rows(out)}
+    failures = []
+    for name, budget in SMOKE_BUDGETS.items():
+        if name not in rows:
+            failures.append(f"{name}: row missing from bench output")
+            continue
+        us, derived = rows[name]
+        cps = float(derived.split()[0]) if derived else float("nan")
+        if not cps <= budget:
+            failures.append(f"{name}: {cps:.0f} collective-permutes "
+                            f"> budget {budget:.0f}")
+    for name, floor in SMOKE_FLOORS.items():
+        if name not in rows:
+            failures.append(f"{name}: row missing from bench output")
+            continue
+        us, _ = rows[name]
+        if not us >= floor:
+            failures.append(f"{name}: {us:.1f} < floor {floor:.1f}")
+    if failures:
+        for f in failures:
+            print(f"SMOKE_FAIL {f}")
+        raise SystemExit(1)
+    print(f"SMOKE_OK ({len(SMOKE_BUDGETS)} collective budgets, "
+          f"{len(SMOKE_FLOORS)} aggregation floors)")
+
+
 def main() -> None:
+    if "--smoke" in sys.argv[1:]:
+        smoke()
+        return
     print("name,us_per_call,derived")
     rc = 0
     rows = []

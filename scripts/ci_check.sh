@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Pre-merge gate: tier-1 tests + collective-budget tests + benchmark
+# smoke mode (collective-permute budgets incl. the mailbox
+# messages-per-collective floor).  Run from anywhere; exits non-zero on
+# the first failure.
+set -euo pipefail
+
+REPO="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+cd "$REPO"
+export PYTHONPATH="$REPO/src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 test suite =="
+python -m pytest -x -q
+
+echo "== collective budget tests =="
+python -m pytest -x -q tests/test_collective_budget.py
+
+echo "== benchmark smoke (collective budgets) =="
+python benchmarks/run.py --smoke
+
+echo CI_CHECK_OK

@@ -1,0 +1,36 @@
+"""Actor layer: per-destination small-message aggregation over Shoal AMs.
+
+The paper's PGAS model pays one network transaction per active message,
+which is ruinous for header-sized control traffic (MoE routing metadata,
+credit returns, serve-engine slot events).  Following the
+scalable-actors-on-PGAS line of work (and DART-MPI's aggregation
+argument), this package adds mailbox objects that append tiny messages
+into a per-destination packet stack — PR 1's ``(nseg, HDR+W)`` fused
+wire format — and flush the whole stack as ONE collective on a
+watermark or an explicit phase boundary.
+
+* :class:`~repro.actors.mailbox.Mailbox` — device-side mailbox: N tiny
+  Short/Long AMs to one destination cost one ``ppermute`` (plus, on an
+  acked transport, one coalesced reply for the whole flush).
+* :class:`~repro.actors.mailbox.ReplyMailbox` — defers the auto-replies
+  of ordinary puts and returns all owed credits per destination as one
+  Short AM.
+* :class:`~repro.actors.events.EventMailbox` — host-side equivalent for
+  control-plane events (serve-engine slot accounting).
+* :mod:`~repro.actors.coalesce` — bit-exact metadata-lane packing so an
+  int sideband rides inside an existing payload collective instead of
+  being its own collective (MoE token routing).
+"""
+
+from repro.actors.coalesce import pack_meta_lane, unpack_meta_lane
+from repro.actors.events import EventMailbox, SlotEvent
+from repro.actors.mailbox import Mailbox, ReplyMailbox
+
+__all__ = [
+    "Mailbox",
+    "ReplyMailbox",
+    "EventMailbox",
+    "SlotEvent",
+    "pack_meta_lane",
+    "unpack_meta_lane",
+]

@@ -1,0 +1,51 @@
+"""Bit-exact metadata-lane packing.
+
+A recurring small-message pattern is an int sideband that travels next
+to a payload collective: MoE expert IDs alongside routed tokens, slot
+indices alongside activations.  Shipping the sideband as its own
+collective doubles the message count; casting it into the payload dtype
+silently corrupts values the mantissa cannot hold.  These helpers
+*bitcast* ints into payload-typed lanes instead — the same lossless
+trick the fused wire format uses for payloads (:func:`repro.core.am.to_wire`)
+— so the metadata rides INSIDE the existing collective as one extra
+lane, bit-exact both ways.
+
+4-byte payload dtypes (f32/i32/u32) carry a full int32 per lane; 2-byte
+dtypes (bf16/f16) carry an int16 per lane, so values must fit in
+[-32768, 32767] — plenty for expert/slot indices, asserted nowhere
+because lanes are traced (callers own the range contract).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def pack_meta_lane(meta: jnp.ndarray, dtype) -> jnp.ndarray:
+    """Bitcast int metadata into lanes of ``dtype`` (the payload dtype).
+
+    Returns an array of ``meta.shape`` and ``dtype`` whose *bits* are
+    the metadata — pass it through any bit-preserving transport (an
+    all_to_all, a ppermute, a fused packet) and recover it with
+    :func:`unpack_meta_lane`.
+    """
+    dt = jnp.dtype(dtype)
+    if dt.itemsize == 4:
+        return lax.bitcast_convert_type(meta.astype(jnp.int32), dt)
+    if dt.itemsize == 2:
+        return lax.bitcast_convert_type(meta.astype(jnp.int16), dt)
+    raise TypeError(
+        f"cannot pack int metadata into {dt} lanes (need 2- or 4-byte "
+        "payload dtype)")
+
+
+def unpack_meta_lane(lane: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`pack_meta_lane`; always returns int32."""
+    itemsize = jnp.dtype(lane.dtype).itemsize
+    if itemsize == 4:
+        return lax.bitcast_convert_type(lane, jnp.int32)
+    if itemsize == 2:
+        return lax.bitcast_convert_type(lane, jnp.int16).astype(jnp.int32)
+    raise TypeError(
+        f"cannot unpack int metadata from {jnp.dtype(lane.dtype)} lanes")

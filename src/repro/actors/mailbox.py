@@ -1,0 +1,257 @@
+"""Mailboxes: trace-time aggregation of tiny AMs into one packet stack.
+
+A :class:`Mailbox` is bound to one ``pattern`` (who talks to whom this
+phase) and a fixed per-message word capacity.  ``send`` appends a
+message — a header-field record plus a zero-padded payload row — into
+the pending stack; when the stack reaches the watermark (or ``flush`` is
+called at a phase boundary) the whole stack ships as ONE fused
+``(n, HDR_WORDS + msg_words)`` collective and is absorbed by the
+mixed-class scanned GAScore ingress (:func:`repro.core.gascore.ingress_stack`).
+N tiny messages therefore cost one ``ppermute`` instead of N — the
+actor-style aggregation buffer, built directly on PR 1's batched >MTU
+wire format.
+
+Reply coalescing: on an acked transport every row in the stack is
+marked async except the last, whose ack token is forced to the
+*mailbox* token — so one flush earns exactly ONE credit on
+``mailbox.token``, regardless of how many messages it carried or what
+per-message tokens/flags they used.  ``wait_replies(token=mb.token,
+n=mb.flushes)`` is the phase-boundary fence.
+
+Mailboxes are trace-time objects: create them inside the traced program
+(or flush before a trace boundary).  Payload rows and header fields stay
+concrete numpy whenever the caller passes concrete values, so a
+1024-message flush lowers to one constant, not 1024 stacked ops.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import am
+from repro.core import gascore as gc
+from repro.core import handlers as hd
+from repro.core import ops
+from repro.core.state import PgasState, ShoalContext
+
+DEFAULT_WATERMARK = 64
+
+# header fields a mailbox records per message (src/dst/seq are uniform
+# across the stack and broadcast at flush time)
+_ROW_FIELDS = ("type", "nwords", "dst_addr", "handler", "token")
+
+
+def _is_concrete(x) -> bool:
+    return isinstance(x, (int, float, np.integer, np.floating, np.ndarray,
+                          list, tuple))
+
+
+class Mailbox:
+    """Per-destination coalescing mailbox over a Shoal context.
+
+    Args:
+      ctx: the Shoal context (transport decides acked/async flushes).
+      pattern: static ``[(src, dst), ...]`` the stack ships along.
+      msg_words: payload word capacity per message (rows are zero-padded
+        to this width; Short rows carry zeros).
+      watermark: pending-message count that triggers an automatic flush
+        from inside ``send``; ``flush`` may be called earlier at any
+        phase boundary.
+      token: credit token the per-flush ack lands on.
+      dtype: payload dtype (must be 32-bit to bitcast onto the wire).
+      reply_via: optional :class:`ReplyMailbox` to defer even the
+        one-per-flush ack into.
+    """
+
+    def __init__(self, ctx: ShoalContext, pattern, *, msg_words: int,
+                 watermark: int = DEFAULT_WATERMARK, token: int = 0,
+                 dtype=jnp.float32, reply_via=None):
+        if not am.wire_dtype_ok(dtype):
+            raise TypeError(
+                f"mailbox payload dtype must be 32-bit (wire bitcast), "
+                f"got {jnp.dtype(dtype)}")
+        if msg_words < 1:
+            raise ValueError("msg_words must be >= 1")
+        if watermark < 1:
+            raise ValueError("watermark must be >= 1")
+        self.ctx = ctx
+        self.pattern = list(pattern)
+        self.msg_words = int(msg_words)
+        self.watermark = int(watermark)
+        self.token = int(token)
+        self.dtype = jnp.dtype(dtype)
+        self.reply_via = reply_via
+        self._fields: list[dict] = []
+        self._payloads: list = []
+        self._tx_words = 0
+        self.flushes = 0
+        self.msgs_sent = 0
+
+    @property
+    def pending(self) -> int:
+        return len(self._fields)
+
+    def __len__(self) -> int:
+        return len(self._fields)
+
+    # -- enqueue ---------------------------------------------------------------
+
+    def _pad_row(self, payload):
+        """Zero-pad one payload to (msg_words,); numpy stays numpy so an
+        all-concrete stack lowers to a single constant at flush."""
+        if _is_concrete(payload):
+            row = np.asarray(payload, self.dtype).reshape(-1)
+            if row.size > self.msg_words:
+                raise ValueError(
+                    f"mailbox message of {row.size} words exceeds msg_words="
+                    f"{self.msg_words}; use put_long for big messages")
+            return np.pad(row, (0, self.msg_words - row.size)), row.size
+        row = jnp.asarray(payload, self.dtype).reshape(-1)
+        if row.size > self.msg_words:
+            raise ValueError(
+                f"mailbox message of {row.size} words exceeds msg_words="
+                f"{self.msg_words}; use put_long for big messages")
+        return jnp.pad(row, (0, self.msg_words - row.size)), row.size
+
+    def send(self, state: PgasState, payload=None, *, dst_addr=0,
+             handler=hd.H_WRITE, msg_class: int = am.LONG, token=None,
+             arg=1) -> PgasState:
+        """Append one tiny AM to the pending stack.
+
+        Long messages land ``payload`` in the destination segment at
+        ``dst_addr`` through ``handler``; Short messages (no payload)
+        run ``handler`` on the destination's credit word ``token`` with
+        ``arg`` — the signaling/credit-return class.  Returns ``state``
+        unchanged unless the watermark triggers an automatic flush.
+        """
+        if msg_class == am.SHORT:
+            if payload is not None:
+                raise ValueError("Short mailbox messages carry no payload")
+            row, nwords = (np.zeros((self.msg_words,), self.dtype), 0)
+            dst_addr = arg                       # Short: dst_addr = handler arg
+        elif msg_class == am.LONG:
+            if payload is None:
+                raise ValueError("Long mailbox messages need a payload")
+            row, nwords = self._pad_row(payload)
+        else:
+            raise ValueError(
+                "mailboxes aggregate Short and Long AMs; Medium delivery "
+                "(payload to kernel) has no coalesced ingress")
+        t = am.make_type(msg_class, asynchronous=True,
+                         fifo=msg_class == am.LONG)
+        self._fields.append(dict(
+            type=t, nwords=nwords, dst_addr=dst_addr, handler=handler,
+            token=self.token if token is None else token))
+        self._payloads.append(row)
+        self._tx_words += nwords
+        self.msgs_sent += 1
+        if len(self._fields) >= self.watermark:
+            state = self.flush(state)
+        return state
+
+    def send_signal(self, state: PgasState, *, handler=hd.H_ADD, arg=1,
+                    token=None) -> PgasState:
+        """Short-AM convenience: enqueue a signal/credit-return."""
+        return self.send(state, None, msg_class=am.SHORT, handler=handler,
+                         arg=arg, token=token)
+
+    # -- flush -----------------------------------------------------------------
+
+    def _stack_column(self, name):
+        vals = [f[name] for f in self._fields]
+        if all(_is_concrete(v) for v in vals):
+            return jnp.asarray(np.asarray(vals, np.int32))
+        return jnp.stack([jnp.asarray(v, jnp.int32) for v in vals])
+
+    def _stack_payloads(self):
+        if all(isinstance(r, np.ndarray) for r in self._payloads):
+            return jnp.asarray(np.stack(self._payloads))
+        return jnp.stack([jnp.asarray(r, self.dtype) for r in self._payloads])
+
+    def flush(self, state: PgasState) -> PgasState:
+        """Ship the pending stack as one collective and absorb it.
+
+        No-op when nothing is pending.  On an acked transport the last
+        row's async bit is cleared and its ack rides the *mailbox*
+        token: exactly one credit per flush, however the stack mixed
+        handler classes or per-message flags.
+        """
+        n = len(self._fields)
+        if n == 0:
+            return state
+        cols = {name: self._stack_column(name) for name in _ROW_FIELDS}
+        hdrs = am.encode_batch(
+            n, src=self.ctx.my_id(), dst=ops._dst_of(self.ctx, self.pattern),
+            **cols)
+        acked = self.ctx.transport.acked
+        if acked:
+            # one ack per flush: only the final row requests a reply
+            # (clear async BEFORE masking so non-senders stay all-NOP)
+            hdrs = hdrs.at[n - 1, 0].set(hdrs[n - 1, 0] & ~am.FLAG_ASYNC)
+        hdrs = ops._mask_nonparticipants(self.ctx, self.pattern, hdrs)
+        pays = self._stack_payloads()
+        state = gc.dataclasses_replace(
+            state, tx_words=state.tx_words + jnp.where(
+                ops._is_sender(self.ctx, self.pattern), self._tx_words, 0))
+        hdr_r, pay_r = ops._exchange(self.ctx, self.pattern, hdrs, pays)
+        state = gc.ingress_stack(self.ctx, state, hdr_r, pay_r,
+                                 self.msg_words)
+        if acked:
+            # the ack is accounted on the mailbox token, not whatever
+            # per-message token the final row happened to carry
+            h_last = dataclasses.replace(
+                am.decode(hdr_r[n - 1]),
+                token=jnp.asarray(self.token, jnp.int32))
+            state = ops._deliver_reply(self.ctx, state, self.pattern, h_last,
+                                       token=self.token,
+                                       reply_via=self.reply_via)
+        self._fields.clear()
+        self._payloads.clear()
+        self._tx_words = 0
+        self.flushes += 1
+        return state
+
+
+class ReplyMailbox:
+    """Deferred-ack aggregation: the reply side of the actor layer.
+
+    Ops called with ``reply_via=this`` skip their immediate auto-reply
+    collective; instead the mailbox records one owed credit per
+    ``(pattern, token)``.  ``flush`` returns all owed credits for each
+    key as ONE Short AM with ``H_ADD`` and ``arg=count`` along the
+    reversed pattern — K acked puts to a destination cost one reply
+    collective instead of K.  Counts are trace-time (the set of puts in
+    a phase is static in SPMD dataflow), so the coalesced return lowers
+    to a single constant-arg signal.
+    """
+
+    def __init__(self, ctx: ShoalContext):
+        self.ctx = ctx
+        self._owed: dict[tuple, int] = {}
+
+    @property
+    def pending(self) -> int:
+        return sum(self._owed.values())
+
+    def note(self, pattern, token) -> None:
+        """Record one owed credit (called by the op layer)."""
+        try:
+            key = (tuple(pattern), int(token))
+        except Exception:
+            raise ValueError(
+                "reply_via needs a static (python int) token — traced "
+                "tokens cannot be coalesced at trace time") from None
+        self._owed[key] = self._owed.get(key, 0) + 1
+
+    def flush(self, state: PgasState) -> PgasState:
+        """Return every owed credit, one coalesced Short AM per
+        (pattern, token): H_ADD with the count as the argument."""
+        owed, self._owed = self._owed, {}
+        for (pattern, token), count in owed.items():
+            state = ops.put_short(
+                self.ctx, state, ops._reverse(list(pattern)),
+                handler=hd.H_ADD, arg=count, token=token, asynchronous=True)
+        return state

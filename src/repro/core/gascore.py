@@ -176,7 +176,8 @@ def ingress_medium_batch(state: PgasState, hdr_rows: jnp.ndarray,
 
 
 def ingress_strided(ctx: ShoalContext, state: PgasState, hdr: am.Header,
-                    payload: jnp.ndarray, blk_words: int, nblocks: int) -> PgasState:
+                    payload: jnp.ndarray, blk_words: int, nblocks: int,
+                    ordered: bool = False) -> PgasState:
     """Strided Long-put ingress: scatter blocks of ``blk_words`` to
     ``dst_addr + i*stride`` (paper carries strided AMs forward from
     THeGASNet).
@@ -186,10 +187,18 @@ def ingress_strided(ctx: ShoalContext, state: PgasState, hdr: am.Header,
     DataMover kernels) instead of a per-block ``fori_loop``.  ``nblocks``
     / ``blk_words`` are the *static* packet capacity; the actual block
     count is ``hdr.nblocks`` (lanes beyond it are dropped), so one shape
-    serves every row of a batched segmentation plan.  Overlapping
-    blocks (``stride < blk_words``) scatter in undefined lane order,
-    matching the am_pack oracle.
+    serves every row of a batched segmentation plan.
+
+    Overlapping blocks (``stride < blk_words``) gather the destination
+    region ONCE and scatter duplicate indices in undefined lane order, so
+    last-writer-wins and read-modify-write handlers are both wrong for
+    them; pass ``ordered=True`` (the op layer does so automatically when
+    the static stride can overlap) to take the block-sequential
+    :func:`ingress_strided_seq` path instead.
     """
+    if ordered:
+        return ingress_strided_seq(ctx, state, hdr, payload, blk_words,
+                                   nblocks)
     active = hdr.msg_class == am.LONG
     flat = nblocks * blk_words
     idx = strided_indices(hdr.dst_addr, hdr.stride, blk_words, nblocks)
@@ -208,18 +217,56 @@ def ingress_strided(ctx: ShoalContext, state: PgasState, hdr: am.Header,
                                rx_words=state.rx_words + jnp.where(active, hdr.nwords, 0))
 
 
+def ingress_strided_seq(ctx: ShoalContext, state: PgasState, hdr: am.Header,
+                        payload: jnp.ndarray, blk_words: int,
+                        nblocks: int) -> PgasState:
+    """Block-sequential :func:`ingress_strided`: a ``lax.scan`` over the
+    blocks so each block's gather sees every earlier block's scatter.
+    This restores the sequential last-writer-wins semantics (and correct
+    read-modify-write accumulation for H_ADD/H_MAX/H_MIN) when blocks
+    alias (``stride < blk_words``), at the cost of a length-``nblocks``
+    dependency chain instead of one flat scatter."""
+    active = hdr.msg_class == am.LONG
+
+    def body(segment, i):
+        lane = lax.iota(jnp.int32, blk_words)
+        idx = hdr.dst_addr + i * hdr.stride + lane
+        flat_lane = i * blk_words + lane
+        valid = active & (i < hdr.nblocks) & (flat_lane < hdr.nwords) \
+            & (idx >= 0) & (idx < ctx.segment_words)
+        idx_c = jnp.clip(idx, 0, ctx.segment_words - 1)
+        region = segment[idx_c]
+        blk_pay = lax.dynamic_slice(payload, (i * blk_words,), (blk_words,))
+        new = ctx.handlers.dispatch(hdr.handler, region, blk_pay)
+        # invalid lanes scatter out of bounds and are dropped; indices
+        # within one block never alias, so .set is well-defined here
+        scatter_idx = jnp.where(valid, idx_c, ctx.segment_words)
+        segment = segment.at[scatter_idx].set(
+            jnp.where(valid, new, region), mode="drop")
+        return segment, ()
+
+    segment, _ = lax.scan(body, state.segment,
+                          jnp.arange(nblocks, dtype=jnp.int32))
+    return dataclasses_replace(
+        state, segment=segment,
+        rx_words=state.rx_words + jnp.where(active, hdr.nwords, 0))
+
+
 def ingress_strided_batch(ctx: ShoalContext, state: PgasState,
                           hdr_rows: jnp.ndarray, pay_rows: jnp.ndarray,
-                          blk_words: int, nblocks: int) -> PgasState:
+                          blk_words: int, nblocks: int,
+                          ordered: bool = False) -> PgasState:
     """Scan of :func:`ingress_strided` over a batched segment stack
-    (``nblocks`` = static per-row block capacity)."""
+    (``nblocks`` = static per-row block capacity).  ``ordered`` selects
+    the block-sequential variant for aliasing strides."""
     if hdr_rows.shape[0] == 1:
         return ingress_strided(ctx, state, am.decode(hdr_rows[0]), pay_rows[0],
-                               blk_words, nblocks)
+                               blk_words, nblocks, ordered)
 
     def body(st, row):
         h, p = row
-        return ingress_strided(ctx, st, am.decode(h), p, blk_words, nblocks), ()
+        return ingress_strided(ctx, st, am.decode(h), p, blk_words, nblocks,
+                               ordered), ()
 
     state, _ = lax.scan(body, state, (hdr_rows, pay_rows))
     return state
@@ -258,6 +305,34 @@ def ingress_short(ctx: ShoalContext, state: PgasState, hdr: am.Header) -> PgasSt
     new_region = jnp.where(is_user, new_region, region)
     credits = lax.dynamic_update_slice(credits, new_region, (token,))
     return dataclasses_replace(state, credits=credits)
+
+
+def ingress_stack(ctx: ShoalContext, state: PgasState, hdr_rows: jnp.ndarray,
+                  pay_rows: jnp.ndarray, packet_words: int) -> PgasState:
+    """Mixed-class scanned ingress for a coalesced packet stack (the
+    actor-mailbox flush path, :mod:`repro.actors`).
+
+    Unlike :func:`ingress_long_batch`, whose rows are segments of ONE
+    message, each row here is an independent tiny AM with its own class,
+    handler, and token: Long rows land in the segment through their
+    handler, Short rows run on the credit file (signals / coalesced
+    credit returns / replies), NOP rows do nothing.  Both datapaths are
+    class-gated per row, so one ``lax.scan`` absorbs a stack that mixes
+    them freely — the dataflow analogue of the GAScore draining a burst
+    of aggregated messages off one AXIS stream.
+    """
+    def body(st, row):
+        h, p = row
+        hd_ = am.decode(h)
+        st = _ingress_long_padded(ctx, st, hd_, p, packet_words)
+        st = ingress_short(ctx, st, hd_)
+        return st, ()
+
+    state = dataclasses_replace(
+        state, segment=_pad_segment(state.segment, packet_words))
+    state, _ = lax.scan(body, state, (hdr_rows, pay_rows))
+    return dataclasses_replace(state,
+                               segment=state.segment[:ctx.segment_words])
 
 
 def _serve_get_row(ctx: ShoalContext, seg_p: jnp.ndarray, hdr: am.Header,

@@ -103,12 +103,24 @@ def _mask_nonparticipants(ctx: ShoalContext, pattern: Pattern, hdr: jnp.ndarray)
 
 
 def _deliver_reply(ctx: ShoalContext, state: PgasState, pattern: Pattern,
-                   hdr_at_dst: am.Header) -> PgasState:
+                   hdr_at_dst: am.Header, *, asynchronous: bool = False,
+                   token=0, reply_via=None) -> PgasState:
     """Ship the auto-reply back along the reversed pattern and absorb it.
 
     For batched >MTU plans this is called once with the *final* segment's
-    header — the only acked one — so a whole message costs one reply."""
-    if not ctx.transport.acked:
+    header — the only acked one — so a whole message costs one reply.
+
+    Statically-async messages short-circuit here: previously an acked
+    transport still shipped the (all-NOP, reply-suppressed) header back,
+    wasting a collective XLA cannot DCE.  When ``reply_via`` (a reply
+    mailbox, see :mod:`repro.actors`) is given, the reply is *deferred*
+    instead of shipped: the mailbox records one owed credit for
+    ``(pattern, token)`` and its flush returns all owed credits for a
+    destination as ONE coalesced Short AM."""
+    if not ctx.transport.acked or asynchronous:
+        return state
+    if reply_via is not None:
+        reply_via.note(pattern, token)
         return state
     rep = gc.auto_reply(hdr_at_dst)
     rep_back, _ = _exchange(ctx, _reverse(pattern), rep, None)
@@ -155,7 +167,7 @@ def _seg_types(msg_class: int, nseg: int, *, asynchronous: bool, **flags):
 
 def put_short(ctx: ShoalContext, state: PgasState, pattern: Pattern, *,
               handler=hd.H_ADD, arg=1, token=0,
-              asynchronous: bool = False) -> PgasState:
+              asynchronous: bool = False, reply_via=None) -> PgasState:
     """Short AM: signal the destination (no payload).
 
     The handler runs on the destination's credit word ``token`` with
@@ -168,7 +180,9 @@ def put_short(ctx: ShoalContext, state: PgasState, pattern: Pattern, *,
     hdr_r, _ = _exchange(ctx, pattern, hdr, None)
     h = am.decode(hdr_r)
     state = gc.ingress_short(ctx, state, h)
-    return _deliver_reply(ctx, state, pattern, h)
+    return _deliver_reply(ctx, state, pattern, h,
+                          asynchronous=asynchronous, token=token,
+                          reply_via=reply_via)
 
 
 # --------------------------------------------------------------------------
@@ -178,7 +192,7 @@ def put_short(ctx: ShoalContext, state: PgasState, pattern: Pattern, *,
 def put_medium(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray | None,
                pattern: Pattern, *, handler=hd.H_NOP, token=0,
                asynchronous: bool = False, from_segment_addr=None,
-               nwords: int | None = None):
+               nwords: int | None = None, reply_via=None):
     """Medium AM: point-to-point payload straight to the destination
     kernel (returned value).  ``from_segment_addr`` selects the
     memory-sourced variant (payload read from the local segment by the
@@ -209,7 +223,9 @@ def put_medium(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray | None,
         jnp.where(_is_sender(ctx, pattern), nwords, 0))
     hdr_r, pay_r = _exchange(ctx, pattern, hdrs, buf)
     state, delivered = gc.ingress_medium_batch(state, hdr_r, pay_r, W)
-    state = _deliver_reply(ctx, state, pattern, am.decode(hdr_r[-1]))
+    state = _deliver_reply(ctx, state, pattern, am.decode(hdr_r[-1]),
+                           asynchronous=asynchronous, token=token,
+                           reply_via=reply_via)
     return state, delivered[:nwords]
 
 
@@ -220,7 +236,7 @@ def put_medium(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray | None,
 def put_long(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray | None,
              pattern: Pattern, dst_addr, *, handler=hd.H_WRITE, token=0,
              asynchronous: bool = False, from_segment_addr=None,
-             nwords: int | None = None) -> PgasState:
+             nwords: int | None = None, reply_via=None) -> PgasState:
     """Long AM: one-sided put into the destination kernel's segment at
     ``dst_addr``, applied through ``handler`` (H_WRITE = plain put,
     H_ADD = remote accumulate, ...).  FIFO variant when ``payload`` is
@@ -250,13 +266,29 @@ def put_long(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray | None,
         jnp.where(_is_sender(ctx, pattern), nwords, 0))
     hdr_r, pay_r = _exchange(ctx, pattern, hdrs, buf)
     state = gc.ingress_long_batch(ctx, state, hdr_r, pay_r, W)
-    return _deliver_reply(ctx, state, pattern, am.decode(hdr_r[-1]))
+    return _deliver_reply(ctx, state, pattern, am.decode(hdr_r[-1]),
+                          asynchronous=asynchronous, token=token,
+                          reply_via=reply_via)
+
+
+def _strides_may_overlap(stride, blk_words: int, nblocks: int) -> bool:
+    """Static overlap detection for strided puts: True when consecutive
+    blocks can alias (``|stride| < blk_words``).  A traced stride is
+    conservatively treated as overlapping — the caller can override with
+    the ``overlap`` kwarg when it knows better."""
+    if nblocks <= 1:
+        return False
+    try:
+        return abs(int(stride)) < blk_words
+    except Exception:  # traced stride: cannot prove blocks disjoint
+        return True
 
 
 def put_long_strided(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray,
                      pattern: Pattern, dst_addr, stride, *,
                      blk_words: int, nblocks: int, handler=hd.H_WRITE,
-                     token=0, asynchronous: bool = False) -> PgasState:
+                     token=0, asynchronous: bool = False,
+                     overlap: bool | None = None, reply_via=None) -> PgasState:
     """Strided Long put: ``nblocks`` blocks of ``blk_words`` land at
     ``dst_addr + i*stride`` (THeGASNet's strided access, carried forward
     by the paper).  ``payload`` is the packed (nblocks*blk_words,)
@@ -265,7 +297,14 @@ def put_long_strided(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray,
 
     >MTU messages segment at block granularity into one batched packet
     stack (single collective, one coalesced reply).
+
+    Aliasing strides (``|stride| < blk_words``) are detected statically
+    and ingress switches to the block-sequential scan that preserves
+    last-writer-wins ordering; a traced stride is conservatively treated
+    as aliasing.  ``overlap`` overrides the detection either way.
     """
+    ordered = (_strides_may_overlap(stride, blk_words, nblocks)
+               if overlap is None else bool(overlap))
     nwords = blk_words * nblocks
     # blocks per packet; >MTU plans segment at block granularity
     per = max(1, ctx.transport.max_packet_words // blk_words)
@@ -288,14 +327,16 @@ def put_long_strided(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray,
         jnp.where(_is_sender(ctx, pattern), nwords, 0))
     hdr_r, pay_r = _exchange(ctx, pattern, hdrs, buf)
     state = gc.ingress_strided_batch(ctx, state, hdr_r, pay_r, blk_words,
-                                     min(per, nblocks))
-    return _deliver_reply(ctx, state, pattern, am.decode(hdr_r[-1]))
+                                     min(per, nblocks), ordered)
+    return _deliver_reply(ctx, state, pattern, am.decode(hdr_r[-1]),
+                          asynchronous=asynchronous, token=token,
+                          reply_via=reply_via)
 
 
 def put_long_vectored(ctx: ShoalContext, state: PgasState,
                       blocks: list[jnp.ndarray], pattern: Pattern,
                       dst_addrs, *, handler=hd.H_WRITE, token=0,
-                      asynchronous: bool = False) -> PgasState:
+                      asynchronous: bool = False, reply_via=None) -> PgasState:
     """Vectored Long put: ``blocks[i]`` lands at ``dst_addrs[i]``.  One
     AM on the wire: the destination address list rides inside the fused
     packet as an extra int32 section (``header ++ addrs ++ payload``),
@@ -326,7 +367,9 @@ def put_long_vectored(ctx: ShoalContext, state: PgasState,
         state = gc.ingress_long(ctx, state, sub_hdr,
                                 lax.dynamic_slice(pay_r, (off,), (w,)), w)
         off += w
-    return _deliver_reply(ctx, state, pattern, h)
+    return _deliver_reply(ctx, state, pattern, h,
+                          asynchronous=asynchronous, token=token,
+                          reply_via=reply_via)
 
 
 # --------------------------------------------------------------------------

@@ -85,6 +85,22 @@ class ShoalContext:
     def make_state(self, dtype=jnp.float32) -> PgasState:
         return PgasState.make(self.segment_words, dtype)
 
+    def mailbox(self, pattern, **kw):
+        """Per-destination coalescing mailbox over this context (the
+        actor layer, :mod:`repro.actors`): N tiny sends along
+        ``pattern`` flush as ONE collective."""
+        from repro.actors import Mailbox  # deferred: actors imports core
+
+        return Mailbox(self, pattern, **kw)
+
+    def reply_mailbox(self):
+        """Deferred-ack mailbox: pass as ``reply_via=`` to put ops so
+        their acks coalesce into one Short AM per destination at
+        flush."""
+        from repro.actors import ReplyMailbox  # deferred: actors imports core
+
+        return ReplyMailbox(self)
+
     def spmd(self, fn, state_spec=None, **shard_map_kwargs):
         """Wrap ``fn`` in shard_map over the kernel axes.
 

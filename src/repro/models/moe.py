@@ -24,6 +24,7 @@ import jax
 from jax import lax
 import jax.numpy as jnp
 
+from repro.actors.coalesce import pack_meta_lane, unpack_meta_lane
 from repro.models import blocks as bl
 
 
@@ -205,13 +206,18 @@ def _dispatch_a2a(p_local, x, dims: MoEDims, shard, E_local: int,
     send_e = jnp.zeros((n_shards * C + 1,), jnp.int32)
     send_e = send_e.at[slot].set(jnp.where(ok, flat_e + 1, 0))  # 0 = empty
 
-    # ship buckets to their owners (the vectored AM / hardware a2a)
-    rx = lax.all_to_all(send_x[:-1].reshape(n_shards, C, d), model_axis,
-                        split_axis=0, concat_axis=0, tiled=False)
-    re = lax.all_to_all(send_e[:-1].reshape(n_shards, C), model_axis,
-                        split_axis=0, concat_axis=0, tiled=False)
-    rx = rx.reshape(n_shards * C, d)
-    re = re.reshape(n_shards * C)
+    # ship buckets to their owners (the vectored AM / hardware a2a).
+    # The expert-id sideband rides INSIDE the token collective as one
+    # extra bitcast lane (actor-layer metadata coalescing) — one
+    # all_to_all for tokens+routing instead of one per section, and
+    # bit-exact where a value cast to bf16 would corrupt ids > 256.
+    meta = pack_meta_lane(send_e[:-1], x.dtype)
+    send = jnp.concatenate([send_x[:-1], meta[:, None]], axis=1)
+    r = lax.all_to_all(send.reshape(n_shards, C, d + 1), model_axis,
+                       split_axis=0, concat_axis=0, tiled=False)
+    r = r.reshape(n_shards * C, d + 1)
+    rx = r[:, :d]
+    re = unpack_meta_lane(r[:, d])
 
     # local second-stage dispatch: received rows -> local expert slots
     valid = re > 0

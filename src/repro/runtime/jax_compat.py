@@ -23,15 +23,50 @@ if hasattr(jax, "shard_map"):  # jax >= 0.6
 else:  # pragma: no cover - depends on installed jax
     from jax.experimental.shard_map import shard_map as _exp_shard_map
 
+    def _spec_axis_names(tree) -> set:
+        """Every mesh axis name mentioned by any PartitionSpec leaf."""
+        from jax.sharding import PartitionSpec as _P
+
+        names: set = set()
+        for leaf in jax.tree_util.tree_leaves(
+                tree, is_leaf=lambda x: isinstance(x, _P)):
+            if not isinstance(leaf, _P):
+                continue
+            for entry in leaf:
+                if entry is None:
+                    continue
+                for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                    names.add(ax)
+        return names
+
     def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
                   check_vma=None, **kw):
         """Adapter onto the pre-0.6 experimental API: ``check_vma`` was
-        called ``check_rep``.  ``axis_names`` (partial-manual mode) is
-        accepted but *ignored* — the region runs fully manual, because
+        called ``check_rep``.
+
+        ``axis_names`` (partial-manual mode) has no old-jax equivalent —
         the old partial-auto lowering hits "PartitionId is not
-        supported" on the CPU SPMD partitioner.  Correctness is
-        unchanged (unnamed axes just replicate instead of GSPMD-auto
-        sharding)."""
+        supported" on the CPU SPMD partitioner — so the region runs
+        FULLY manual instead.  That fallback is only sound while the
+        auto (non-manual) axes stay *unnamed* in the specs: unnamed
+        axes merely replicate, which changes cost but not values.  A
+        spec that shards an argument over an auto axis of size > 1
+        would be silently dropped to replication, changing per-shard
+        shapes and semantics inside ``f`` — that case raises instead of
+        miscomputing.
+        """
+        if axis_names is not None:
+            auto = set(mesh.axis_names) - set(axis_names)
+            bad = sorted(
+                a for a in _spec_axis_names((in_specs, out_specs))
+                if a in auto and mesh.shape[a] > 1)
+            if bad:
+                raise NotImplementedError(
+                    f"jax {jax.__version__} shard_map shim: partial-manual "
+                    f"regions fall back to fully-manual, which cannot honor "
+                    f"specs that shard over the auto (GSPMD) axes {bad}; "
+                    "drop those axes from the specs (replicate) or upgrade "
+                    "to jax >= 0.6 for true partial-manual mode")
         if check_vma is not None:
             kw.setdefault("check_rep", check_vma)
         return _exp_shard_map(f, mesh=mesh, in_specs=in_specs,

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.actors.events import EventMailbox, SlotEvent
 from repro.models.model import Model
 
 
@@ -33,7 +34,8 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model: Model, params, lanes: int, slots: int,
-                 greedy: bool = True, temperature: float = 1.0, seed: int = 0):
+                 greedy: bool = True, temperature: float = 1.0, seed: int = 0,
+                 event_sink=None, event_watermark: int = 64):
         self.model = model
         self.params = params
         self.lanes = lanes
@@ -41,6 +43,11 @@ class ServeEngine:
         self.greedy = greedy
         self.temperature = temperature
         self.rng = np.random.default_rng(seed)
+        # slot accounting goes through a mailbox: acquire/release events
+        # batch up and reach event_sink once per decode step (phase
+        # boundary), not once per lane transition
+        self.events = EventMailbox(watermark=event_watermark,
+                                   sink=event_sink)
 
         self.cache = model.make_cache(lanes, slots)
         self.pos = np.zeros((lanes,), np.int32)
@@ -100,6 +107,7 @@ class ServeEngine:
                 req.out.append(int(tok))
                 self.pos[lane] = len(req.prompt)
                 self.last_tok[lane] = tok
+                self.events.send(SlotEvent("acquire", lane, req.rid))
                 return True
         return False
 
@@ -128,6 +136,9 @@ class ServeEngine:
             if len(req.out) >= req.max_new:
                 req.done = True
                 self.active[lane] = None
+                self.events.send(SlotEvent("release", lane, req.rid))
+        # phase boundary: this step's slot events go out as one batch
+        self.events.flush()
 
     def run(self, requests: list[Request]) -> list[Request]:
         """Serve a request list to completion (simple FCFS scheduler)."""
@@ -140,4 +151,5 @@ class ServeEngine:
             for r in requests:
                 if r.done and r not in done:
                     done.append(r)
+        self.events.flush()
         return done

@@ -1,0 +1,198 @@
+"""Actor-mailbox semantic + collective-budget checks.
+
+Run by tests/test_actors.py in a subprocess with 8 host devices.  Three
+properties of the actor layer are *measured* here, not believed:
+
+* flush semantics — a stack mixing Long writes, Long accumulates, and
+  Short signals dispatches every row correctly through the scanned
+  mixed-class ingress, and an acked flush earns exactly one credit on
+  the mailbox token;
+* the headline budget — 1024 4-word sends to one destination compile
+  to <= 2 collective-permutes (1 fused stack + 1 coalesced reply),
+  vs 1024+ in the message-at-a-time model;
+* reply coalescing — puts routed through a ReplyMailbox pay one credit
+  collective per (destination, token) at flush, not one per put.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.actors import Mailbox, ReplyMailbox
+from repro.core import handlers as hd, ops
+from repro.core.address_space import GlobalAddressSpace
+from repro.core.state import ShoalContext
+from repro.launch.hlo_analysis import parse_collectives
+from repro.runtime import TCP, UDP
+from repro.runtime.topology import make_cpu_mesh
+
+N = 8
+RING = [(i, (i + 1) % N) for i in range(N)]
+
+
+def cp_count(gas, prog):
+    state0 = gas.make_global_state()
+    hlo = jax.jit(gas.spmd(prog)).lower(state0).compile().as_text()
+    return parse_collectives(hlo).ops.get("collective-permute", 0.0)
+
+
+def check(name, ok, detail=""):
+    assert ok, f"{name}: FAILED {detail}"
+    print(f"[actors] {name} ok {detail}")
+
+
+def make(transport, segment_words):
+    ctx = ShoalContext(mesh=make_cpu_mesh(N, ("kernel",)), axes=("kernel",),
+                       transport=transport, segment_words=segment_words)
+    return ctx, GlobalAddressSpace(ctx)
+
+
+def test_mailbox_mixed_stack_semantics():
+    """Long writes + Long adds + Short signals in ONE flush, correct
+    per-row dispatch, one credit per flush on the mailbox token."""
+    ctx, gas = make(TCP, 256)
+
+    def prog(st):
+        mb = Mailbox(ctx, RING, msg_words=4, watermark=1024, token=5)
+        me1 = (ctx.my_id() + 1).astype(jnp.float32)
+        for i in range(6):
+            st = mb.send(st, me1 * (jnp.arange(4.0) + 1) + 100 * i,
+                         dst_addr=8 * i)
+        st = mb.send(st, jnp.full((4,), 0.5), dst_addr=0, handler=hd.H_ADD)
+        st = mb.send_signal(st, handler=hd.H_ADD, arg=3, token=7)
+        st = mb.flush(st)
+        assert mb.flushes == 1 and mb.msgs_sent == 8 and mb.pending == 0
+        return ops.wait_replies(ctx, st, token=5, n=1)
+
+    out = jax.jit(gas.spmd(prog))(gas.make_global_state())
+    seg = np.asarray(out.segment)
+    cred = np.asarray(out.credits)
+    for k in range(N):
+        pred = (k - 1) % N            # my sender on the ring
+        for i in range(6):
+            want = (pred + 1) * (np.arange(4.0) + 1) + 100 * i
+            if i == 0:
+                want = want + 0.5     # the H_ADD row aliases dst_addr 0
+            np.testing.assert_allclose(seg[k, 8 * i:8 * i + 4], want,
+                                       err_msg=f"kernel {k} row {i}")
+        assert cred[k, 7] == 3, (k, cred[k])
+        assert cred[k, 5] == 0, (k, cred[k])   # exactly 1 ack, drained
+    assert not np.asarray(out.error).any()
+    check("mailbox/mixed-stack semantics", True, f"(8 msgs, {N} kernels)")
+
+
+def test_1024_sends_two_collectives():
+    """The acceptance criterion: 1024 4-word mailbox sends to one
+    destination compile to <= 2 collectives (stack + coalesced reply)."""
+    n_msgs, w = 1024, 4
+    ctx, gas = make(TCP, n_msgs * w + 64)
+
+    def prog(st):
+        mb = Mailbox(ctx, RING, msg_words=w, watermark=1 << 20, token=1)
+        base = np.arange(w, dtype=np.float32)
+        for i in range(n_msgs):
+            st = mb.send(st, base + i, dst_addr=w * i)
+        st = mb.flush(st)
+        return ops.wait_replies(ctx, st, token=1, n=1)
+
+    cps = cp_count(gas, prog)
+    check("mailbox/1024-sends budget", cps <= 2,
+          f"({cps:.0f} collective-permutes <= 2; "
+          f"{n_msgs / max(cps, 1):.0f} msgs/collective)")
+
+    # and the async transport drops the reply: one collective total
+    ctx_u, gas_u = make(UDP, n_msgs * w + 64)
+
+    def prog_u(st):
+        mb = Mailbox(ctx_u, RING, msg_words=w, watermark=1 << 20)
+        base = np.arange(w, dtype=np.float32)
+        for i in range(n_msgs):
+            st = mb.send(st, base + i, dst_addr=w * i)
+        return mb.flush(st)
+
+    cps_u = cp_count(gas_u, prog_u)
+    check("mailbox/1024-sends async budget", cps_u <= 1,
+          f"({cps_u:.0f} collective-permutes <= 1)")
+
+
+def test_watermark_autoflush():
+    """send() flushes automatically at the watermark; each flush is its
+    own collective and its own credit."""
+    ctx, gas = make(TCP, 256)
+
+    def prog(st):
+        mb = Mailbox(ctx, RING, msg_words=2, watermark=4, token=3)
+        for i in range(10):
+            st = mb.send(st, np.asarray([float(i), 0.0]), dst_addr=2 * i)
+        assert mb.flushes == 2 and mb.pending == 2
+        st = mb.flush(st)
+        assert mb.flushes == 3
+        return ops.wait_replies(ctx, st, token=3, n=3)
+
+    out = jax.jit(gas.spmd(prog))(gas.make_global_state())
+    seg = np.asarray(out.segment)
+    for k in range(N):
+        np.testing.assert_allclose(seg[k, 0:20:2], np.arange(10.0))
+    assert not np.asarray(out.error).any()
+    check("mailbox/watermark autoflush", True, "(10 sends @ watermark 4)")
+
+
+def test_reply_mailbox_coalesces_acks():
+    """K acked puts with reply_via pay ONE credit collective per
+    (destination, token) at flush, and the credits still arrive."""
+    ctx, gas = make(TCP, 256)
+
+    def prog_coalesced(st):
+        rmb = ReplyMailbox(ctx)
+        pay = jnp.arange(4.0)
+        st = ops.put_long(ctx, st, pay, RING, dst_addr=0, token=2,
+                          reply_via=rmb)
+        st = ops.put_long(ctx, st, pay, RING, dst_addr=8, token=2,
+                          reply_via=rmb)
+        st = ops.put_long(ctx, st, pay, RING, dst_addr=16, token=2,
+                          reply_via=rmb)
+        assert rmb.pending == 3
+        st = rmb.flush(st)
+        return ops.wait_replies(ctx, st, token=2, n=3)
+
+    def prog_baseline(st):
+        pay = jnp.arange(4.0)
+        for a in (0, 8, 16):
+            st = ops.put_long(ctx, st, pay, RING, dst_addr=a, token=2)
+        return ops.wait_replies(ctx, st, token=2, n=3)
+
+    out = jax.jit(gas.spmd(prog_coalesced))(gas.make_global_state())
+    assert not np.asarray(out.error).any()
+    assert (np.asarray(out.credits) == 0).all()
+    cps = cp_count(gas, prog_coalesced)
+    cps_base = cp_count(gas, prog_baseline)
+    # 3 data + 1 coalesced credit return vs 3 data + 3 replies
+    check("reply-mailbox coalescing", cps < cps_base,
+          f"({cps:.0f} < {cps_base:.0f} collective-permutes)")
+
+
+def test_async_put_skips_reply_collective():
+    """The credit-audit fix: a statically-async put on an acked
+    transport no longer ships a wasted all-NOP reply."""
+    ctx, gas = make(TCP, 256)
+
+    def prog(st):
+        return ops.put_long(ctx, st, jnp.arange(4.0), RING, dst_addr=0,
+                            asynchronous=True)
+
+    cps = cp_count(gas, prog)
+    check("async-put reply elision", cps == 1,
+          f"({cps:.0f} collective-permutes == 1)")
+
+
+def main():
+    test_mailbox_mixed_stack_semantics()
+    test_1024_sends_two_collectives()
+    test_watermark_autoflush()
+    test_reply_mailbox_coalesces_acks()
+    test_async_put_skips_reply_collective()
+    print("ACTOR_CHECKS_ALL_PASS")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Compat-path checks for runtime.jax_compat.shard_map.
+
+Run by tests/test_jax_compat.py in a subprocess with 8 host devices.
+The old-jax (< 0.6) shim replaces partial-manual shard_map with a FULLY
+manual region; this is sound only while the auto (non-manual) axes stay
+unnamed in the specs (they replicate — different cost, same values).
+These checks pin both halves of that contract:
+
+* partial-manual numerics agree with the direct computation on whatever
+  jax is installed (replication path on old jax, true partial-manual on
+  new jax);
+* a spec that *shards over* an auto axis of size > 1 raises a clear
+  NotImplementedError on old jax instead of silently replicating (which
+  would change per-shard shapes and semantics inside the body);
+* size-1 auto axes may appear in specs (sharding over them is a no-op).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.runtime.jax_compat import bound_axis_names, make_mesh, shard_map
+
+OLD_JAX = not hasattr(jax, "shard_map")
+
+
+def check(name, ok, detail=""):
+    assert ok, f"{name}: FAILED {detail}"
+    print(f"[compat] {name} ok {detail}")
+
+
+def test_partial_manual_numerics():
+    """data axis manual, model axis auto-but-unnamed: the psum over the
+    manual axis must produce the exact global sum on both jax paths."""
+    mesh = make_mesh((2, 4), ("data", "model"))
+    x = jnp.arange(2 * 3, dtype=jnp.float32).reshape(2, 3)
+
+    def body(xs):
+        return jax.lax.psum(xs, "data")
+
+    fn = shard_map(body, mesh=mesh, in_specs=P("data"), out_specs=P(),
+                   axis_names={"data"}, check_vma=False)
+    out = jax.jit(fn)(x)
+    # per-device block is (1, 3); psum over "data" -> the global column
+    # sum, replicated (out_specs=P() keeps the block shape)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(x).sum(0, keepdims=True))
+    check("partial-manual numerics", True, f"(old_jax={OLD_JAX})")
+
+
+def test_model_axis_spec_guard():
+    """Naming a size>1 auto axis in a spec must raise on old jax (the
+    shim cannot honor it) rather than silently replicate."""
+    if not OLD_JAX:
+        print("[compat] model-axis spec guard skipped (new jax: true "
+              "partial-manual mode handles it)")
+        return
+    mesh = make_mesh((2, 4), ("data", "model"))
+
+    def body(xs):
+        return xs
+
+    try:
+        shard_map(body, mesh=mesh, in_specs=P("data", "model"),
+                  out_specs=P("data", "model"), axis_names={"data"},
+                  check_vma=False)
+    except NotImplementedError as e:
+        assert "model" in str(e) and "fully-manual" in str(e), e
+        check("model-axis spec guard", True, "(raises NotImplementedError)")
+        return
+    raise AssertionError(
+        "old-jax shim accepted a spec sharding over auto axis 'model'")
+
+
+def test_size1_auto_axis_allowed():
+    """A size-1 auto axis named in a spec is a no-op and must not raise
+    (replication over size 1 IS sharding over size 1)."""
+    mesh = make_mesh((8, 1), ("data", "model"))
+    x = jnp.arange(8 * 4, dtype=jnp.float32).reshape(8, 4)
+
+    def body(xs):
+        return xs * 2
+
+    fn = shard_map(body, mesh=mesh, in_specs=P("data", "model"),
+                   out_specs=P("data", "model"), axis_names={"data"},
+                   check_vma=False)
+    out = jax.jit(fn)(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x) * 2)
+    check("size-1 auto axis allowed", True)
+
+
+def test_bound_axis_names_introspection():
+    """On old jax, bound_axis_names() inside the (fully manual) region
+    reports the manual axes — the hook model.py uses to skip sharding
+    constraints that mention them; empty on new jax."""
+    mesh = make_mesh((2, 4), ("data", "model"))
+    seen = []
+
+    def body(xs):
+        seen.append(bound_axis_names())
+        return xs
+
+    fn = shard_map(body, mesh=mesh, in_specs=P("data"), out_specs=P("data"),
+                   axis_names={"data"}, check_vma=False)
+    jax.jit(fn)(jnp.zeros((2, 3), jnp.float32))
+    if OLD_JAX:
+        assert "data" in seen[0], seen
+    else:
+        assert seen[0] == frozenset(), seen
+    check("bound_axis_names introspection", True, f"({sorted(seen[0])})")
+
+
+def main():
+    test_partial_manual_numerics()
+    test_model_axis_spec_guard()
+    test_size1_auto_axis_allowed()
+    test_bound_axis_names_introspection()
+    print("COMPAT_CHECKS_ALL_PASS")
+
+
+if __name__ == "__main__":
+    main()

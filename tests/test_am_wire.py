@@ -127,6 +127,44 @@ def test_encode_batch_broadcast_and_rows():
         am.encode_batch(2, bogus=1)
 
 
+_RT_DTYPES = (np.float32, np.int32, np.uint32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(dtype_i=st.integers(0, len(_RT_DTYPES) - 1),
+       n_extra=st.integers(0, 4),
+       nseg=st.integers(1, 4),
+       width=st.integers(1, 9))
+def test_pack_unpack_roundtrip_property(dtype_i, n_extra, nseg, width):
+    """Property: pack_packet/unpack_packet round-trip BIT-exactly over
+    dtype x extra-section length x segment count x payload width —
+    including payload bit patterns that are NaN/denormal as f32 (the
+    wire is a bitcast, never a value conversion).  nseg == 1 exercises
+    the unbatched single-packet shape, nseg > 1 the (nseg, ...) stack."""
+    dtype = _RT_DTYPES[dtype_i]
+    rng = np.random.default_rng(
+        1 + dtype_i * 1000 + n_extra * 100 + nseg * 10 + width)
+    pay_np = rng.integers(0, 2**32, size=(nseg, width),
+                          dtype=np.uint32).view(dtype)
+    extra_np = rng.integers(0, 2**20, size=(nseg, n_extra), dtype=np.int32)
+    t = am.make_type(am.LONG, fifo=True, vectored=n_extra > 0)
+    hdr = am.encode_batch(nseg, type=t, nwords=jnp.full((nseg,), width),
+                          nblocks=n_extra, seq=jnp.arange(nseg) * width)
+    pay, extra = jnp.asarray(pay_np), jnp.asarray(extra_np)
+    if nseg == 1:  # cover the unbatched packet shape too
+        hdr, pay, extra = hdr[0], pay[0], extra[0]
+    pkt = am.pack_packet(hdr, pay, extra if n_extra else None)
+    assert pkt.dtype == jnp.int32
+    assert pkt.shape[-1] == am.HDR_WORDS + n_extra + width
+    out = am.unpack_packet(pkt, pay.dtype, n_extra)
+    h2, e2, p2 = out if n_extra else (out[0], None, out[1])
+    np.testing.assert_array_equal(np.asarray(h2), np.asarray(hdr))
+    assert np.asarray(p2).tobytes() == pay_np.tobytes()
+    assert np.asarray(p2).dtype == pay_np.dtype
+    if n_extra:
+        np.testing.assert_array_equal(np.asarray(e2), extra_np.reshape(e2.shape))
+
+
 def test_wire_dtype_guard():
     assert am.wire_dtype_ok(jnp.float32) and am.wire_dtype_ok(jnp.int32)
     assert not am.wire_dtype_ok(jnp.bfloat16)

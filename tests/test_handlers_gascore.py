@@ -204,6 +204,133 @@ def test_ingress_strided_vectorized_matches_ref():
     np.testing.assert_allclose(out2.segment[23:25], 0.0)
 
 
+def _strided_seq_ref(segment, payload, dst_addr, stride, blk_words, nblocks,
+                     handler):
+    """Numpy oracle: blocks applied strictly in order, so later blocks
+    see (and overwrite / accumulate onto) earlier blocks' effects."""
+    seg = np.array(segment, np.float64)
+    pay = np.asarray(payload, np.float64)
+    for i in range(nblocks):
+        lo = dst_addr + i * stride
+        blk = pay[i * blk_words:(i + 1) * blk_words]
+        if handler == hd.H_WRITE:
+            seg[lo:lo + blk_words] = blk
+        elif handler == hd.H_ADD:
+            seg[lo:lo + blk_words] += blk
+        else:
+            raise NotImplementedError(handler)
+    return seg
+
+
+@pytest.mark.parametrize("handler", [hd.H_WRITE, hd.H_ADD])
+def test_ingress_strided_overlap_ordered(handler):
+    """Regression: stride < blk_words aliases consecutive blocks.  The
+    vectorized scatter applies aliased lanes in undefined order (and its
+    single up-front gather makes read-modify-write handlers read stale
+    values); the ordered variant must match the sequential oracle."""
+    ctx = make_ctx(segment_words=64)
+    st_ = PgasState.make(64)
+    st_ = gc.dataclasses_replace(
+        st_, segment=st_.segment.at[:64].set(jnp.arange(64.0) / 10))
+    blk_words, nblocks, stride, dst_addr = 3, 4, 1, 5
+    pay = jnp.arange(1.0, 1.0 + blk_words * nblocks)
+    hdr = am.decode(am.encode(
+        type=am.make_type(am.LONG, strided=True), nwords=blk_words * nblocks,
+        dst_addr=dst_addr, stride=stride, blk_words=blk_words,
+        nblocks=nblocks, handler=handler))
+    out = gc.ingress_strided(ctx, st_, hdr, pay, blk_words, nblocks,
+                             ordered=True)
+    want = _strided_seq_ref(st_.segment, pay, dst_addr, stride, blk_words,
+                            nblocks, handler)
+    np.testing.assert_allclose(np.asarray(out.segment), want, rtol=1e-6)
+    assert int(out.rx_words) == blk_words * nblocks
+
+
+def test_ingress_strided_ordered_matches_vectorized_when_disjoint():
+    """With non-aliasing strides both variants agree (same index map,
+    same masking of dynamic nblocks below static capacity)."""
+    ctx = make_ctx(segment_words=64)
+    st_ = PgasState.make(64)
+    pay = jnp.arange(1.0, 7.0)
+    hdr = am.decode(am.encode(type=am.make_type(am.LONG, strided=True),
+                              nwords=4, dst_addr=5, stride=9, blk_words=2,
+                              nblocks=2, handler=hd.H_WRITE))
+    vec = gc.ingress_strided(ctx, st_, hdr, pay, 2, 3)
+    seq = gc.ingress_strided(ctx, st_, hdr, pay, 2, 3, ordered=True)
+    np.testing.assert_array_equal(np.asarray(vec.segment),
+                                  np.asarray(seq.segment))
+
+
+def test_put_long_strided_overlap_autoselect():
+    """The op layer detects aliasing strides statically and routes the
+    put through the ordered ingress: an aliasing strided put must land
+    with sequential last-writer-wins semantics end to end."""
+    import jax
+    from repro.core import ops
+    from repro.core.address_space import GlobalAddressSpace
+
+    ctx = make_ctx(segment_words=64)
+    gas = GlobalAddressSpace(ctx)
+    blk_words, nblocks, stride, dst_addr = 3, 4, 1, 5
+    pay = np.arange(1.0, 1.0 + blk_words * nblocks, dtype=np.float32)
+
+    def prog(st):
+        st = ops.put_long_strided(ctx, st, jnp.asarray(pay), [(0, 0)],
+                                  dst_addr=dst_addr, stride=stride,
+                                  blk_words=blk_words, nblocks=nblocks,
+                                  token=1)
+        return ops.wait_replies(ctx, st, token=1, n=1)
+
+    out = jax.jit(gas.spmd(prog))(gas.make_global_state())
+    want = _strided_seq_ref(np.zeros(64), pay, dst_addr, stride, blk_words,
+                            nblocks, hd.H_WRITE)
+    np.testing.assert_allclose(np.asarray(out.segment)[0], want, rtol=1e-6)
+    assert int(np.asarray(out.error)[0]) == 0
+    # detection: aliasing or traced strides -> ordered; disjoint -> not
+    assert ops._strides_may_overlap(1, 3, 4)
+    assert ops._strides_may_overlap(-2, 3, 4)
+    assert not ops._strides_may_overlap(9, 3, 4)
+    assert not ops._strides_may_overlap(1, 3, 1)  # single block never aliases
+    seen = []
+    jax.jit(lambda s: seen.append(ops._strides_may_overlap(s, 3, 4)) or s)(
+        jnp.asarray(9))
+    assert seen == [True]  # traced stride: conservatively ordered
+
+
+def test_mailbox_flush_single_credit_mixed_flags():
+    """Credit audit (satellite 3): one flushed stack earns exactly ONE
+    credit on the mailbox token, even when the stack mixes handler
+    classes and per-message tokens, and a second flush earns a second.
+    The per-message tokens never see ack credits."""
+    import jax
+    from repro.core.address_space import GlobalAddressSpace
+
+    ctx = make_ctx(segment_words=64)
+    gas = GlobalAddressSpace(ctx)
+
+    def prog(st):
+        mb = ctx.mailbox([(0, 0)], msg_words=2, watermark=100, token=6)
+        st = mb.send(st, np.asarray([1.0, 2.0]), dst_addr=0, token=1)
+        st = mb.send(st, np.asarray([3.0]), dst_addr=4, handler=hd.H_ADD,
+                     token=2)
+        st = mb.send_signal(st, arg=5, token=9)   # Short row, its own token
+        st = mb.flush(st)
+        st = mb.send(st, np.asarray([7.0]), dst_addr=8, token=3)
+        st = mb.flush(st)
+        assert mb.flushes == 2
+        return st
+
+    out = jax.jit(gas.spmd(prog))(gas.make_global_state())
+    cred = np.asarray(out.credits)[0]
+    assert cred[6] == 2, cred          # exactly one ack credit per flush
+    assert cred[9] == 5, cred          # the user Short ran its handler
+    assert cred[1] == 0 and cred[2] == 0 and cred[3] == 0, cred
+    seg = np.asarray(out.segment)[0]
+    np.testing.assert_allclose(seg[0:2], [1, 2])
+    np.testing.assert_allclose(seg[4:5], [3])
+    np.testing.assert_allclose(seg[8:9], [7])
+
+
 def test_egress_fifo_pads():
     ctx = make_ctx()
     st_ = PgasState.make(64)

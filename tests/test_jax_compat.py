@@ -1,0 +1,11 @@
+"""Compat-path tests for the old-jax shard_map shim (satellite of the
+actor-layer PR): partial-manual numerics, the auto-axis spec guard, and
+manual-axis introspection all run in a subprocess with 8 host devices
+(tests/compat_checks.py) so both mesh axes have real extent."""
+
+from conftest import run_subprocess_checks
+
+
+def test_compat_checks_multidevice():
+    out = run_subprocess_checks("compat_checks.py")
+    assert "COMPAT_CHECKS_ALL_PASS" in out

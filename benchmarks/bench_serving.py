@@ -1,0 +1,123 @@
+import os
+
+if __name__ == "__main__":
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=4")
+
+"""Disaggregated-serving benchmark: sustained decode under a mixed
+prefill/decode arrival trace.
+
+Topology: 2 prefill kernels + 2 decode kernels (2 lanes each) on one
+kernel mesh.  A deterministic arrival trace feeds the admission
+front-end (bounded queue, REJECTED jobs retried on later ticks — the
+backpressure path is part of what is measured); every admitted request
+is prefilled on a prefill kernel and its KV migrated to a decode lane
+as ONE ``put_long_vectored`` into the decode kernel's PGAS segment.
+
+CSV rows (``name,value,derived``):
+
+* ``serving/mixed-trace/tokens-per-s`` — sustained generated tokens/s
+  over the whole trace (admission + prefill + migration + decode);
+* ``serving/mixed-trace/peak-queue-depth`` — observed admission-queue
+  high-water mark, with the configured bound in the derived column;
+* ``comm/kv-migrate/vectored-lane`` — µs per compiled KV-migration call
+  and its HLO collective-permute count (must be 2: one fused vectored
+  packet + one coalesced reply).
+
+``BENCH_SMOKE=1`` trims the trace.  Driven by
+``benchmarks/run.py --serving``, which asserts the budgets and merges
+the rows into ``BENCH_comm.json``.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import parse_collectives
+from repro.launch.mesh import ServingSlices
+from repro.models.model import ModelConfig, build_model
+from repro.serving import DONE, REJECTED, ServeFrontend
+from repro.serving.disagg import DisaggServeTier
+from repro.serving.engine import lane_slice
+
+from benchmarks._timing import time_fn
+
+SMOKE = os.environ.get("BENCH_SMOKE") == "1"
+N_REQ = 6 if SMOKE else 24
+MAX_QUEUE = 8
+SLOTS = 16
+
+TINY = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                   n_heads=2, n_kv_heads=2, d_ff=64, vocab=64,
+                   dtype=jnp.float32)
+
+
+def make_trace(n):
+    """Deterministic mixed-arrival trace: (tick_arrivals, prompts)."""
+    rng = np.random.default_rng(0)
+    reqs = [(list(rng.integers(1, TINY.vocab,
+                               size=int(rng.integers(2, 7)))),
+             int(rng.integers(3, 7)))
+            for _ in range(n)]
+    return rng, reqs
+
+
+def drive_trace(fe, reqs, rng):
+    """Feed the trace through the front-end; rejected submissions retry
+    on a later tick (the backpressure contract at work)."""
+    pending = list(reqs)
+    done_jobs = []
+    t0 = time.perf_counter()
+    while pending or fe.pump():
+        for _ in range(int(rng.integers(0, 3))):
+            if not pending:
+                break
+            prompt, max_new = pending[0]
+            job = fe.submit(prompt, max_new)
+            if job.status == REJECTED:
+                break               # queue full: retry this tick's rest later
+            pending.pop(0)
+            done_jobs.append(job)
+        fe.pump()
+    elapsed = time.perf_counter() - t0
+    return done_jobs, elapsed
+
+
+def main():
+    model = build_model(TINY)
+    params = model.init(jax.random.PRNGKey(0))
+    slices = ServingSlices(n_prefill=2, n_decode=2)
+    tier = DisaggServeTier(model, params, slices, lanes_per_decode=2,
+                           slots=SLOTS)
+    fe = ServeFrontend(tier, max_queue=MAX_QUEUE)
+
+    rng, reqs = make_trace(N_REQ)
+    # warm the compile caches (all prefill lengths, decode, migrations)
+    # so the timed trace measures serving, not XLA compiles
+    warm, _ = drive_trace(ServeFrontend(tier, max_queue=MAX_QUEUE),
+                          reqs, np.random.default_rng(1))
+    assert all(j.status == DONE for j in warm)
+
+    jobs, elapsed = drive_trace(fe, reqs, rng)
+    assert all(j.status == DONE for j in jobs), "trace left unfinished jobs"
+    tokens = sum(len(j.tokens) for j in jobs)
+    print(f"serving/mixed-trace/tokens-per-s,{tokens / elapsed:.1f},"
+          f"{len(jobs)} reqs {tokens} tokens in {elapsed:.2f}s")
+    print(f"serving/mixed-trace/peak-queue-depth,{fe.peak_queue_depth:.0f},"
+          f"bound={MAX_QUEUE}")
+
+    # one KV migration: µs per call + the HLO collective budget
+    src, dst = 0, slices.decode_ids[0]
+    blocks = tuple(tier.kv.pack_lane(
+        lane_slice(tier.workers[src]._cache0, 0)))
+    fn = tier._migration(src, dst, 0)
+    us = time_fn(fn, tier.state, blocks, iters=3 if SMOKE else 20, warmup=2)
+    hlo = tier.migration_hlo(src, dst, 0)
+    cps = parse_collectives(hlo).ops.get("collective-permute", 0.0)
+    print(f"comm/kv-migrate/vectored-lane,{us:.1f},{cps:.0f}")
+
+
+if __name__ == "__main__":
+    main()

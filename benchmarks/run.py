@@ -21,6 +21,12 @@ it runs only ``bench_comm`` (with ``BENCH_SMOKE=1``, few timing iters,
 no big Jacobi grid), asserts every comm row's collective-permute budget
 including the mailbox messages-per-collective floor, and does NOT
 rewrite ``BENCH_comm.json``.
+
+``--serving`` is the disaggregated-serving smoke mode: it runs
+``bench_serving`` (mixed prefill/decode arrival trace through the
+admission front-end), asserts the KV-migration collective budget, the
+bounded admission-queue depth and a nonzero sustained tokens/s, and
+merges the rows into ``BENCH_comm.json`` under ``current.serving``.
 """
 
 import json
@@ -152,9 +158,71 @@ def smoke() -> None:
           f"{len(SMOKE_FLOORS)} aggregation floors)")
 
 
+# --serving gates: the KV migration's collective budget (1 fused
+# vectored packet + 1 coalesced reply) and the admission bound
+SERVING_CP_BUDGETS = {
+    "comm/kv-migrate/vectored-lane": 2.0,
+}
+
+
+def serving() -> None:
+    """Disaggregated-serving smoke: run the mixed-arrival trace bench,
+    assert the migration collective budget / bounded queue depth /
+    nonzero sustained throughput, and merge the rows into
+    BENCH_comm.json under ``current.serving`` (the comm/benches/baseline
+    sections are left untouched)."""
+    print("name,us_per_call,derived")
+    code, out = run_sub("benchmarks.bench_serving", 4,
+                        extra_env={"BENCH_SMOKE": "1"})
+    if code:
+        raise SystemExit(f"bench_serving failed (rc={code})")
+    rows = {name: (us, derived) for name, us, derived in parse_rows(out)}
+    failures = []
+    for name, budget in SERVING_CP_BUDGETS.items():
+        if name not in rows:
+            failures.append(f"{name}: row missing from bench output")
+            continue
+        cps = float(rows[name][1].split()[0])
+        if not cps <= budget:
+            failures.append(f"{name}: {cps:.0f} collective-permutes "
+                            f"> budget {budget:.0f}")
+    tps = rows.get("serving/mixed-trace/tokens-per-s")
+    if tps is None:
+        failures.append("serving/mixed-trace/tokens-per-s: row missing")
+    elif not tps[0] > 0:
+        failures.append(f"tokens-per-s: {tps[0]} not > 0")
+    depth = rows.get("serving/mixed-trace/peak-queue-depth")
+    if depth is None:
+        failures.append("serving/mixed-trace/peak-queue-depth: row missing")
+    else:
+        bound = float(depth[1].split("=")[1])
+        if not depth[0] <= bound:
+            failures.append(f"peak-queue-depth: {depth[0]:.0f} "
+                            f"> admission bound {bound:.0f}")
+    if failures:
+        for f in failures:
+            print(f"SERVING_FAIL {f}")
+        raise SystemExit(1)
+    doc = {"schema": "bench_comm/v1"}
+    if os.path.exists(BENCH_JSON):
+        with open(BENCH_JSON) as f:
+            doc = json.load(f)
+    doc.setdefault("current", {})["serving"] = {
+        name: {"value": us, "derived": derived}
+        for name, (us, derived) in rows.items()}
+    with open(BENCH_JSON, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"SERVING_OK ({len(rows)} rows merged into "
+          f"{os.path.relpath(BENCH_JSON, REPO)})")
+
+
 def main() -> None:
     if "--smoke" in sys.argv[1:]:
         smoke()
+        return
+    if "--serving" in sys.argv[1:]:
+        serving()
         return
     print("name,us_per_call,derived")
     rc = 0

@@ -15,7 +15,13 @@ python -m pytest -x -q
 echo "== collective budget tests =="
 python -m pytest -x -q tests/test_collective_budget.py
 
+echo "== serving tier tests (disaggregated prefill/decode) =="
+python -m pytest -x -q tests/test_serving_disagg.py
+
 echo "== benchmark smoke (collective budgets) =="
 python benchmarks/run.py --smoke
+
+echo "== serving smoke (migration budget, bounded queue) =="
+python benchmarks/run.py --serving
 
 echo CI_CHECK_OK

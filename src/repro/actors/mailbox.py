@@ -237,13 +237,28 @@ class ReplyMailbox:
         return sum(self._owed.values())
 
     def note(self, pattern, token) -> None:
-        """Record one owed credit (called by the op layer)."""
+        """Record one owed credit (called by the op layer).
+
+        ``token`` must be static: the coalesced return is a single Short
+        AM whose ``arg`` is the trace-time credit *count* per
+        ``(pattern, token)`` key, so a traced token has no dict key to
+        accumulate under.  Rather than let the caller hit JAX's generic
+        concretization error deep inside ``int()``, raise a targeted
+        one that names the fix.
+        """
         try:
-            key = (tuple(pattern), int(token))
+            key = (tuple(tuple(p) for p in pattern), int(token))
         except Exception:
             raise ValueError(
-                "reply_via needs a static (python int) token — traced "
-                "tokens cannot be coalesced at trace time") from None
+                "ReplyMailbox.note: reply_via coalescing needs a static "
+                "(python int) token — owed credits are counted per "
+                f"(pattern, token) at trace time, and this token is "
+                f"{type(token).__name__!s} (a traced/non-concrete value "
+                "has no trace-time key to accumulate under). Either pass "
+                "a concrete token to the put op, or flush this reply "
+                "mailbox first (state = reply_mailbox.flush(state)) and "
+                "issue the traced-token op with reply_via=None so its "
+                "ack ships immediately instead of coalescing.") from None
         self._owed[key] = self._owed.get(key, 0) + 1
 
     def flush(self, state: PgasState) -> PgasState:

@@ -48,9 +48,52 @@ class GlobalAddressSpace:
         return gaddr % self.segment_words
 
     def global_addr(self, kernel: int, offset: int) -> int:
+        if not 0 <= kernel < self.ctx.num_kernels:
+            raise ValueError(
+                f"global_addr: kernel {kernel} out of range "
+                f"(num_kernels={self.ctx.num_kernels})")
         if not 0 <= offset < self.segment_words:
-            raise ValueError(f"offset {offset} outside segment")
+            # an out-of-range offset would silently alias into another
+            # kernel's partition of the flat global word array
+            would_own = (kernel * self.segment_words + offset) // self.segment_words
+            raise ValueError(
+                f"global_addr: offset {offset} outside the "
+                f"{self.segment_words}-word segment owned by kernel "
+                f"{kernel}; the aliased address would land in kernel "
+                f"{would_own}'s partition at local offset "
+                f"{offset % self.segment_words}")
         return kernel * self.segment_words + offset
+
+    def check_local_range(self, kernel: int, offset: int, nwords: int) -> int:
+        """Validate that ``[offset, offset + nwords)`` stays inside
+        ``kernel``'s segment; returns ``offset``.  Used by callers that
+        hand *local* destination addresses to the AM ops (where aliasing
+        past the segment end is clipped by the GAScore, not wrapped)."""
+        self.global_addr(kernel, offset)
+        if nwords < 0 or offset + nwords > self.segment_words:
+            raise ValueError(
+                f"range [{offset}, {offset + nwords}) overruns kernel "
+                f"{kernel}'s {self.segment_words}-word segment")
+        return offset
+
+    def vectored_addrs(self, kernel: int, base: int, block_words,
+                       *, stride: int | None = None) -> list[int]:
+        """Per-block local addresses for a vectored put into ``kernel``.
+
+        ``block_words`` is the static per-block word count list; blocks
+        land back-to-back from ``base`` unless ``stride`` pins a fixed
+        distance between block starts (the per-layer stride of a KV
+        segment layout).  Every block is validated against the segment
+        bounds, so a bad layout fails at trace time with the owner in
+        the message instead of silently clipping at ingress.
+        """
+        addrs, off = [], base
+        for i, w in enumerate(block_words):
+            a = base + i * stride if stride is not None else off
+            self.check_local_range(kernel, a, int(w))
+            addrs.append(a)
+            off = a + int(w)
+        return addrs
 
     # -- host <-> device views ---------------------------------------------
 

@@ -342,7 +342,23 @@ def put_long_vectored(ctx: ShoalContext, state: PgasState,
     packet as an extra int32 section (``header ++ addrs ++ payload``),
     so the whole message is a single collective; the receiver scatters.
     Block sizes are static; addresses may be traced."""
+    try:
+        n_addrs = len(dst_addrs)
+    except TypeError:
+        n_addrs = int(jnp.shape(jnp.asarray(dst_addrs))[0])
+    if n_addrs != len(blocks):
+        # jnp indexing clamps, so a short address list would silently
+        # alias trailing blocks onto the last address
+        raise ValueError(
+            f"put_long_vectored: {len(blocks)} blocks but {n_addrs} "
+            "dst_addrs — one destination address per block")
     nwords = sum(int(b.size) for b in blocks)
+    if nwords + len(blocks) > ctx.transport.max_packet_words:
+        raise ValueError(
+            f"put_long_vectored: {nwords} payload words + {len(blocks)} "
+            f"in-packet addresses exceed the transport MTU "
+            f"({ctx.transport.max_packet_words} words); vectored puts do "
+            "not segment — split the block list across messages")
     payload = jnp.concatenate([b.reshape(-1) for b in blocks])
     t = am.make_type(am.LONG, asynchronous=asynchronous, fifo=True, vectored=True)
     hdr = am.encode(type=t, src=ctx.my_id(), dst=_dst_of(ctx, pattern),

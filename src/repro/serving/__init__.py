@@ -1,3 +1,20 @@
-from repro.serving.engine import ServeEngine
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.frontend import (DONE, QUEUED, REJECTED, RUNNING, Job,
+                                    ServeFrontend)
+from repro.serving.kv_space import MIGRATE_TOKEN, KvSegmentSpace
 
-__all__ = ["ServeEngine"]
+__all__ = [
+    "ServeEngine", "Request",
+    "ServeFrontend", "Job", "QUEUED", "RUNNING", "DONE", "REJECTED",
+    "KvSegmentSpace", "MIGRATE_TOKEN",
+]
+
+
+def __getattr__(name):
+    # DisaggServeTier pulls in mesh/shard_map machinery; import lazily so
+    # `from repro.serving import ServeEngine` stays light.
+    if name in ("DisaggServeTier", "PrefillWorker"):
+        from repro.serving import disagg
+
+        return getattr(disagg, name)
+    raise AttributeError(name)

@@ -9,6 +9,12 @@ attend).
 
 ``serve_step`` (= one ``decode_step`` over the full lane batch) is what
 the ``decode_*`` / ``long_*`` dry-run shapes lower.
+
+The lane-cache helpers (:func:`lane_slice`, :func:`lane_write`,
+:func:`reset_lane`) are module-level so the disaggregated tier
+(:mod:`repro.serving.disagg`) runs the *same* per-lane prefill path on
+its prefill workers — bit-identical caches are what make migrated-KV
+decode match the single-host oracle exactly.
 """
 
 from __future__ import annotations
@@ -30,6 +36,45 @@ class Request:
     max_new: int
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+
+
+# --------------------------------------------------------------------------
+# lane-cache plumbing (shared with the disaggregated prefill workers)
+# --------------------------------------------------------------------------
+
+def lane_slice(cache, lane):
+    """Slice one lane's cache view (B=1 on axis 1) out of a full cache."""
+    return jax.tree.map(
+        lambda c: jax.lax.dynamic_slice_in_dim(c, lane, 1, axis=1)
+        if c.ndim >= 2 else c, cache)
+
+
+def lane_write(cache, lane_cache, lane):
+    """Write a (B=1) lane cache back into the full cache at ``lane``."""
+    return jax.tree.map(
+        lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+            full, one.astype(full.dtype), lane, axis=1)
+        if full.ndim >= 2 else one, cache, lane_cache)
+
+
+def reset_lane(cache, lane: int):
+    """Clear a lane's cache before reuse: position slots to -1 (so the
+    masked attention ignores them), recurrent states to their inits."""
+
+    def reset(path, c):
+        if c.ndim < 2:
+            return c
+        name = str(getattr(path[-1], "key", path[-1]))
+        lane_shape = c.shape[:1] + (1,) + c.shape[2:]
+        if name == "pos":
+            fresh = -jnp.ones(lane_shape, c.dtype)
+        elif name == "m":
+            fresh = jnp.full(lane_shape, -30.0, c.dtype)
+        else:
+            fresh = jnp.zeros(lane_shape, c.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(c, fresh, lane, axis=1)
+
+    return jax.tree_util.tree_map_with_path(reset, cache)
 
 
 class ServeEngine:
@@ -57,59 +102,64 @@ class ServeEngine:
         # single-lane prefill (prompts have ragged lengths; each fills its
         # own lane's cache slice)
         self._prefill_one = jax.jit(self._prefill_lane)
+        self._adopt = jax.jit(lane_write)
 
     # -- lane-granular prefill ------------------------------------------------
 
     def _prefill_lane(self, params, cache, tokens, lane):
         """Run a (1, S) prompt and write its cache into lane ``lane``."""
-        lane_cache = jax.tree.map(
-            lambda c: jax.lax.dynamic_slice_in_dim(c, lane, 1, axis=1)
-            if c.ndim >= 2 else c, cache)
+        lane_cache = lane_slice(cache, lane)
         logits, lane_cache = self.model.prefill(params, {"tokens": tokens},
                                                 lane_cache)
-        cache = jax.tree.map(
-            lambda full, one: jax.lax.dynamic_update_slice_in_dim(
-                full, one.astype(full.dtype), lane, axis=1)
-            if full.ndim >= 2 else one, cache, lane_cache)
+        cache = lane_write(cache, lane_cache, lane)
         return logits, cache
 
     # -- scheduling -------------------------------------------------------------
 
     def _reset_lane(self, lane: int):
-        """Clear a lane's cache before reuse: position slots to -1 (so the
-        masked attention ignores them), recurrent states to their inits."""
+        self.cache = reset_lane(self.cache, lane)
 
-        def reset(path, c):
-            if c.ndim < 2:
-                return c
-            name = str(getattr(path[-1], "key", path[-1]))
-            lane_shape = c.shape[:1] + (1,) + c.shape[2:]
-            if name == "pos":
-                fresh = -jnp.ones(lane_shape, c.dtype)
-            elif name == "m":
-                fresh = jnp.full(lane_shape, -30.0, c.dtype)
-            else:
-                fresh = jnp.zeros(lane_shape, c.dtype)
-            return jax.lax.dynamic_update_slice_in_dim(c, fresh, lane, axis=1)
-
-        self.cache = jax.tree_util.tree_map_with_path(reset, self.cache)
+    def find_free_lane(self) -> int | None:
+        """Lowest free lane index, or None when saturated."""
+        for lane, cur in enumerate(self.active):
+            if cur is None:
+                return lane
+        return None
 
     def submit(self, req: Request) -> bool:
         """Place a request on a free lane (prefill now).  False if full."""
-        for lane, cur in enumerate(self.active):
-            if cur is None:
-                self._reset_lane(lane)
-                self.active[lane] = req
-                toks = jnp.asarray(req.prompt, jnp.int32)[None]
-                logits, self.cache = self._prefill_one(
-                    self.params, self.cache, toks, lane)
-                tok = self._sample(np.asarray(logits)[0])
-                req.out.append(int(tok))
-                self.pos[lane] = len(req.prompt)
-                self.last_tok[lane] = tok
-                self.events.send(SlotEvent("acquire", lane, req.rid))
-                return True
-        return False
+        lane = self.find_free_lane()
+        if lane is None:
+            return False
+        self._reset_lane(lane)
+        self.active[lane] = req
+        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+        logits, self.cache = self._prefill_one(
+            self.params, self.cache, toks, lane)
+        tok = self._sample(np.asarray(logits)[0])
+        req.out.append(int(tok))
+        self.pos[lane] = len(req.prompt)
+        self.last_tok[lane] = tok
+        self.events.send(SlotEvent("acquire", lane, req.rid))
+        return True
+
+    def adopt_lane(self, lane: int, lane_cache, req: Request, *,
+                   pos: int, last_tok: int) -> None:
+        """Attach an externally prefilled request to ``lane``.
+
+        ``lane_cache`` is a (B=1) cache pytree — in the disaggregated
+        tier it is read back out of this kernel's PGAS segment after a
+        prefill worker migrated it in with one vectored put.  The lane
+        is NOT reset first: adoption overwrites every cache leaf.
+        """
+        if self.active[lane] is not None:
+            raise ValueError(f"adopt_lane: lane {lane} is busy "
+                             f"(rid={self.active[lane].rid})")
+        self.cache = self._adopt(self.cache, lane_cache, lane)
+        self.active[lane] = req
+        self.pos[lane] = pos
+        self.last_tok[lane] = last_tok
+        self.events.send(SlotEvent("acquire", lane, req.rid))
 
     def _sample(self, logits: np.ndarray) -> int:
         if self.greedy:
@@ -140,6 +190,22 @@ class ServeEngine:
         # phase boundary: this step's slot events go out as one batch
         self.events.flush()
 
+    @property
+    def idle(self) -> bool:
+        return all(r is None for r in self.active)
+
+    def drain(self):
+        """Force-deliver pending slot events when the request stream ends.
+
+        ``step`` flushes at its phase boundary, but a stream can end
+        with events still below the watermark (e.g. a final ``submit``
+        whose acquire never met another step, or callers driving
+        ``submit``/``step`` directly).  Without an explicit drain those
+        trailing events were silently dropped; every exit path must end
+        here.  Returns the final delivered batch.
+        """
+        return self.events.flush()
+
     def run(self, requests: list[Request]) -> list[Request]:
         """Serve a request list to completion (simple FCFS scheduler)."""
         pending = list(requests)
@@ -151,5 +217,5 @@ class ServeEngine:
             for r in requests:
                 if r.done and r not in done:
                     done.append(r)
-        self.events.flush()
+        self.drain()
         return done

@@ -1,0 +1,203 @@
+"""KV caches as PGAS Shoal segments (the disaggregated-serving store).
+
+``model.make_cache`` builds a pytree of per-lane ring caches.  For the
+disaggregated tier that state must be able to *move* — a finished
+prefill's KV migrates from a prefill kernel to a free decode lane — so
+:class:`KvSegmentSpace` gives every lane a fixed region of the global
+address space and a trace-time-resolved layout inside it:
+
+    lane base address   = lane * lane_words
+    leaf offset         = running word offset of the cache leaf (static
+                          flatten order of the cache pytree)
+    layer stride        = words-per-layer of that leaf (the leading
+                          ``reps`` scan dim of a stacked cache leaf)
+
+so the address of (lane, leaf, layer) is a Python int at trace time —
+the global->local translation is specialized into the compiled program,
+exactly the hardware-address-mapping argument the UPC study makes
+(PAPERS.md), and the whole lane migrates as ONE ``put_long_vectored``
+whose per-layer destination addresses ride in-packet (PR 1's fused wire
+format).  No gather/scatter collective, no per-layer message.
+
+Word encoding: segments are float32 word arrays; cache leaves are
+*value-cast* onto them (bf16/f16 -> f32 is exact, int32 ring positions
+are exact for |v| < 2**24, i.e. any realistic slot count).  A bitcast
+would be byte-faithful but NaN-hazardous: int bit patterns reinterpreted
+as floats can be NaN-canonicalized by the masking arithmetic on the
+egress path, so the value cast is the bit-identity-preserving choice.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ops
+from repro.core.address_space import GlobalAddressSpace
+from repro.core.state import PgasState
+
+# credit token reserved for KV migrations (separate from app traffic so
+# wait_replies on a migration never drains an application credit)
+MIGRATE_TOKEN = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class KvLeaf:
+    """Layout of one cache-pytree leaf inside a lane's segment region."""
+
+    path: str                     # human-readable pytree path
+    layers: int                   # leading scan (reps) dim
+    shape: tuple[int, ...]        # per-lane per-layer shape
+    dtype: object                 # original leaf dtype
+    words: int                    # words per layer (= layer stride)
+    offset: int                   # word offset inside the lane region
+
+    @property
+    def total_words(self) -> int:
+        return self.layers * self.words
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+class KvSegmentSpace:
+    """Places ``lanes`` ring KV caches into PGAS segments.
+
+    Every decode kernel uses the same layout over its own segment, so a
+    prefill kernel can compute a migration's destination addresses
+    locally from ``(lane,)`` alone — locality is explicit, per the
+    paper's Sec. II-A3 contract.
+    """
+
+    def __init__(self, gas: GlobalAddressSpace, model, *, lanes: int,
+                 slots: int):
+        self.gas = gas
+        self.ctx = gas.ctx
+        self.lanes = int(lanes)
+        self.slots = int(slots)
+        proto = model.make_cache(1, slots)
+        flat, self._treedef = jax.tree_util.tree_flatten_with_path(proto)
+        if not flat:
+            raise ValueError("model cache has no leaves to place in the "
+                             "address space")
+        leaves: list[KvLeaf] = []
+        off = 0
+        for path, leaf in flat:
+            if leaf.ndim < 2 or leaf.shape[1] != 1:
+                raise ValueError(
+                    f"cache leaf {_path_str(path)} has shape {leaf.shape}; "
+                    "expected (layers, lane, ...) stacked cache state")
+            words = math.prod(leaf.shape[2:]) if leaf.ndim > 2 else 1
+            leaves.append(KvLeaf(
+                path=_path_str(path), layers=int(leaf.shape[0]),
+                shape=tuple(leaf.shape[2:]), dtype=leaf.dtype,
+                words=int(words), offset=off))
+            off += int(leaf.shape[0]) * int(words)
+        self.leaves = tuple(leaves)
+        self.lane_words = off
+        need = self.lanes * self.lane_words
+        if need > self.ctx.segment_words:
+            raise ValueError(
+                f"KvSegmentSpace needs {need} words ({self.lanes} lanes x "
+                f"{self.lane_words} words/lane) but segments hold only "
+                f"{self.ctx.segment_words}")
+        n_blocks = sum(leaf.layers for leaf in self.leaves)
+        if self.lane_words + n_blocks > self.ctx.transport.max_packet_words:
+            raise ValueError(
+                f"one KV lane ({self.lane_words} payload words + "
+                f"{n_blocks} vectored addresses) exceeds the transport "
+                f"MTU ({self.ctx.transport.max_packet_words} words); "
+                "vectored puts do not segment — shrink slots or raise "
+                "max_packet_bytes")
+
+    # -- addressing (all Python ints: resolved at trace time) ---------------
+
+    def lane_base(self, lane: int) -> int:
+        if not 0 <= lane < self.lanes:
+            raise ValueError(f"lane {lane} out of range ({self.lanes} lanes)")
+        return lane * self.lane_words
+
+    def block_addrs(self, lane: int, *, kernel: int = 0) -> list[int]:
+        """Per-(leaf, layer) destination addresses for migrating one lane
+        into ``kernel``'s segment — the vectored address list that rides
+        in-packet.  Validated against the owner's segment bounds."""
+        base = self.lane_base(lane)
+        addrs: list[int] = []
+        for leaf in self.leaves:
+            addrs.extend(self.gas.vectored_addrs(
+                kernel, base + leaf.offset,
+                [leaf.words] * leaf.layers, stride=leaf.words))
+        return addrs
+
+    # -- pack / unpack -------------------------------------------------------
+
+    def pack_lane(self, lane_cache) -> list[jnp.ndarray]:
+        """Flatten a (B=1) lane cache into per-(leaf, layer) segment-word
+        blocks, ordered to match :meth:`block_addrs`."""
+        flat, treedef = jax.tree_util.tree_flatten(lane_cache)
+        if treedef != self._treedef:
+            raise ValueError(
+                "lane cache structure does not match this KvSegmentSpace "
+                f"layout: {treedef} != {self._treedef}")
+        seg_dtype = jnp.dtype(self.gas.dtype)
+        blocks: list[jnp.ndarray] = []
+        for leaf_meta, leaf in zip(self.leaves, flat):
+            rows = leaf.reshape(leaf_meta.layers, leaf_meta.words)
+            blocks.extend(rows[l].astype(seg_dtype)
+                          for l in range(leaf_meta.layers))
+        return blocks
+
+    def unpack_lane(self, segment_row, lane: int):
+        """Rebuild a (B=1) lane cache pytree from one kernel's segment
+        words (the decode-side view refresh after a migration landed)."""
+        base = self.lane_base(lane)
+        seg = jnp.asarray(segment_row)
+        leaves = []
+        for leaf in self.leaves:
+            flat = jax.lax.dynamic_slice(
+                seg, (base + leaf.offset,), (leaf.total_words,))
+            leaves.append(flat.reshape((leaf.layers, 1) + leaf.shape)
+                          .astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(self._treedef, leaves)
+
+    # -- migration -----------------------------------------------------------
+
+    def migrate(self, state: PgasState, blocks, pattern, lane: int, *,
+                token: int = MIGRATE_TOKEN, wait: bool = True) -> PgasState:
+        """One finished prefill's KV -> a decode lane, as ONE vectored put.
+
+        Runs inside the SPMD program: ``pattern`` is the static
+        ``[(prefill_kernel, decode_kernel)]`` link, ``blocks`` the
+        :meth:`pack_lane` output, and the per-layer destination address
+        list is resolved here at trace time and shipped in-packet.  On
+        an acked transport the single coalesced reply is awaited on the
+        migration token, so the decode side's adoption is ordered after
+        the write.
+        """
+        dst = pattern[-1][1]
+        addrs = self.block_addrs(lane, kernel=dst)
+        state = ops.put_long_vectored(self.ctx, state, list(blocks), pattern,
+                                      addrs, token=token)
+        if wait and self.ctx.transport.acked:
+            # only the prefill side gets the reply; waiting for n=1 on
+            # every kernel would raise the underflow bit on the rest
+            n = ops._is_sender(self.ctx, pattern).astype(jnp.int32)
+            state = ops.wait_replies(self.ctx, state, token=token, n=n)
+        return state
+
+    def describe(self) -> str:
+        """Human-readable layout table (README / debugging aid)."""
+        lines = [f"lane_words={self.lane_words} lanes={self.lanes} "
+                 f"segment_words={self.ctx.segment_words}"]
+        for leaf in self.leaves:
+            lines.append(
+                f"  +{leaf.offset:<6} {leaf.path}: {leaf.layers} layers x "
+                f"{leaf.words} words (shape {leaf.shape}, "
+                f"{jnp.dtype(leaf.dtype).name})")
+        return "\n".join(lines)

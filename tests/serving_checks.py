@@ -1,0 +1,114 @@
+"""Multi-kernel disaggregated-serving checks (subprocess, 4 host devices).
+
+Run by tests/test_serving_disagg.py via conftest.run_subprocess_checks:
+
+* the compiled KV-migration program costs exactly 2 collective-permutes
+  (1 fused vectored packet with the per-layer address list in-packet +
+  1 coalesced reply) — the PR's collective-budget acceptance gate;
+* requests served through the tier — prefill on the prefill slice, ONE
+  vectored put into the decode kernel's segment, adoption on a decode
+  lane — decode to exactly the tokens the single-host in-place engine
+  produces (ragged prompts, mixed lane progress, both decode kernels);
+* no sticky error bits anywhere (in particular no wait-underflow from
+  the sender-side-only migration reply);
+* the admission front-end over the tier: queue depth stays bounded,
+  rejected jobs are visible, admitted jobs complete via slot events.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import parse_collectives
+from repro.launch.mesh import ServingSlices
+from repro.models.model import ModelConfig, build_model
+from repro.serving import (DONE, REJECTED, Request, ServeEngine,
+                           ServeFrontend)
+from repro.serving.disagg import DisaggServeTier
+
+TINY = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                   n_heads=2, n_kv_heads=2, d_ff=64, vocab=64,
+                   dtype=jnp.float32)
+SLOTS = 16
+
+PROMPTS = [[3, 14, 15, 9, 2], [7, 8], [30, 2, 9], [11, 12, 13, 5],
+           [1, 4], [22, 40, 8]]
+MAX_NEW = [5, 3, 4, 5, 3, 4]
+
+
+def check_migration_budget(tier):
+    for src, dst in [(0, 2), (1, 3)]:
+        hlo = tier.migration_hlo(src, dst, lane=0)
+        cps = parse_collectives(hlo).ops.get("collective-permute", 0.0)
+        assert cps == 2, (f"migration {src}->{dst}: {cps:.0f} "
+                          "collective-permutes != 2 (1 vectored packet "
+                          "+ 1 coalesced reply)")
+        print(f"[serving] migrate {src}->{dst}: {cps:.0f} "
+              "collective-permutes == 2 ok")
+
+
+def check_bit_identity(model, params, tier):
+    reqs = [Request(i, np.asarray(p, np.int32), m)
+            for i, (p, m) in enumerate(zip(PROMPTS, MAX_NEW))]
+    done = tier.run(reqs)
+    assert len(done) == len(reqs)
+    assert tier.migrations == len(reqs)
+    # every kernel's sticky error word must be clean — in particular no
+    # ERR_WAIT_UNDERFLOW from the migration reply on non-sender kernels
+    err = np.asarray(jax.device_get(tier.state.error))
+    assert (err == 0).all(), f"sticky error bits set: {err}"
+    # oracle: the same request solo on a single-host in-place engine
+    oracle = ServeEngine(model, params, lanes=1, slots=SLOTS)
+    for req in reqs:
+        ref = Request(req.rid, req.prompt, req.max_new)
+        oracle.run([ref])
+        assert req.out == ref.out, (
+            f"rid {req.rid}: migrated decode {req.out} != oracle {ref.out}")
+        assert len(req.out) == req.max_new
+    print(f"[serving] {len(reqs)} migrated requests bit-identical to the "
+          "single-host oracle")
+
+
+def check_frontend(tier):
+    fe = ServeFrontend(tier, max_queue=2)
+    jobs = [fe.submit(p, m) for p, m in zip(PROMPTS, MAX_NEW)]
+    rejected = [j for j in jobs if j.status == REJECTED]
+    assert rejected, "expected backpressure with max_queue=2 and 6 submits"
+    fe.run_until_idle()
+    # retry the rejected ones, pumping between attempts so the bounded
+    # queue drains — the backpressure contract from the caller's side
+    retries, pending = [], [(list(j.request.prompt), j.request.max_new)
+                           for j in rejected]
+    while pending:
+        job = fe.submit(*pending[0])
+        if job.status == REJECTED:
+            fe.pump()
+            continue
+        pending.pop(0)
+        retries.append(job)
+    fe.run_until_idle()
+    admitted = [j for j in jobs if j.status != REJECTED] + retries
+    assert all(j.status == DONE for j in admitted)
+    assert fe.peak_queue_depth <= fe.max_queue
+    stats = fe.stats()
+    assert stats["busy_lanes"] == 0 and stats["queue_depth"] == 0
+    print(f"[serving] frontend: {stats['admitted']} admitted, "
+          f"{stats['rejected']} rejected, peak queue depth "
+          f"{fe.peak_queue_depth} <= {fe.max_queue}")
+
+
+def main():
+    model = build_model(TINY)
+    params = model.init(jax.random.PRNGKey(0))
+    slices = ServingSlices(n_prefill=2, n_decode=2)
+    tier = DisaggServeTier(model, params, slices, lanes_per_decode=2,
+                           slots=SLOTS)
+    print("[serving] " + tier.kv.describe().splitlines()[0])
+    check_migration_budget(tier)
+    check_bit_identity(model, params, tier)
+    check_frontend(tier)
+    print("SERVING_CHECKS_OK")
+
+
+if __name__ == "__main__":
+    main()

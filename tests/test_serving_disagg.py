@@ -1,0 +1,415 @@
+"""Disaggregated-serving tier tests.
+
+Single-device tests run inline: KV segment layout + validation, a
+pure-local migrate round trip, migrated-adoption bit-identity against
+the in-place engine oracle, the admission front-end's queue semantics,
+and the satellite regressions (engine drain, global_addr range errors,
+vectored-put validation, ReplyMailbox traced-token message).  The real
+cross-kernel migration — HLO collective budget and the migrated-decode
+oracle over disjoint prefill/decode slices — runs in a subprocess via
+tests/serving_checks.py with its own host-device count.
+"""
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import run_subprocess_checks
+
+from repro.actors.events import EventMailbox, SlotEvent
+from repro.core import ops
+from repro.core.address_space import GlobalAddressSpace
+from repro.core.state import ShoalContext
+from repro.launch.mesh import ServingSlices
+from repro.models.model import ModelConfig, build_model
+from repro.runtime import TCP
+from repro.runtime.topology import make_cpu_mesh
+from repro.serving import (DONE, QUEUED, REJECTED, RUNNING, KvSegmentSpace,
+                           MIGRATE_TOKEN, Request, ServeEngine, ServeFrontend)
+from repro.serving.disagg import PrefillWorker, _lane_words
+from repro.serving.engine import lane_slice
+
+LOCAL = [(0, 0)]
+
+TINY = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                   n_heads=2, n_kv_heads=2, d_ff=64, vocab=64,
+                   dtype=jnp.float32)
+SLOTS = 16
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    model = build_model(TINY)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def make_gas(segment_words=64, transport=TCP):
+    mesh = make_cpu_mesh(1, ("kernel",))
+    ctx = ShoalContext(mesh=mesh, axes=("kernel",), transport=transport,
+                       segment_words=segment_words)
+    return ctx, GlobalAddressSpace(ctx)
+
+
+def make_kv(model, lanes=2, slots=SLOTS):
+    ctx, gas = make_gas(segment_words=lanes * _lane_words(model, slots))
+    return ctx, gas, KvSegmentSpace(gas, model, lanes=lanes, slots=slots)
+
+
+# -- KvSegmentSpace layout ---------------------------------------------------
+
+def test_kv_space_layout(tiny_model):
+    model, _ = tiny_model
+    ctx, gas, kv = make_kv(model)
+    assert kv.lane_words == _lane_words(model, SLOTS)
+    assert kv.lane_base(1) == kv.lane_words
+    with pytest.raises(ValueError, match="lane 2 out of range"):
+        kv.lane_base(2)
+    # one address per (leaf, layer) block, disjoint and in-segment
+    addrs = kv.block_addrs(1)
+    assert len(addrs) == sum(leaf.layers for leaf in kv.leaves)
+    assert all(kv.lane_base(1) <= a < 2 * kv.lane_words for a in addrs)
+    assert len(set(addrs)) == len(addrs)
+    # layer stride is the per-layer word count of each leaf
+    i = 0
+    for leaf in kv.leaves:
+        for layer in range(leaf.layers):
+            assert addrs[i] == kv.lane_base(1) + leaf.offset + layer * leaf.words
+            i += 1
+    assert "lane_words" in kv.describe()
+
+
+def test_kv_space_validates_capacity(tiny_model):
+    model, _ = tiny_model
+    ctx, gas = make_gas(segment_words=64)
+    with pytest.raises(ValueError, match="KvSegmentSpace needs"):
+        KvSegmentSpace(gas, model, lanes=2, slots=SLOTS)
+    tiny_mtu = dataclasses.replace(TCP, max_packet_bytes=64)
+    ctx, gas = make_gas(segment_words=1 << 16, transport=tiny_mtu)
+    with pytest.raises(ValueError, match="MTU"):
+        KvSegmentSpace(gas, model, lanes=1, slots=SLOTS)
+
+
+def test_kv_pack_rejects_foreign_structure(tiny_model):
+    model, _ = tiny_model
+    ctx, gas, kv = make_kv(model)
+    with pytest.raises(ValueError, match="does not match"):
+        kv.pack_lane({"x": jnp.zeros((2, 1, 4))})
+
+
+def test_kv_pack_unpack_roundtrip_exact(tiny_model):
+    """Value-cast through the f32 segment is exact: unpack(pack(cache))
+    reproduces every leaf bit-for-bit (incl. the int32 ring positions)."""
+    model, params = tiny_model
+    ctx, gas, kv = make_kv(model)
+    worker = PrefillWorker(model, params, SLOTS, kernel_id=0)
+    _, lane_cache = worker.prefill(np.asarray([3, 14, 15, 9], np.int32))
+    blocks = kv.pack_lane(lane_cache)
+    seg = np.zeros(ctx.segment_words, np.float32)
+    for a, b in zip(kv.block_addrs(1), blocks):
+        arr = np.asarray(b)
+        seg[a:a + arr.size] = arr
+    got = kv.unpack_lane(seg, 1)
+    for want, have in zip(jax.tree.leaves(lane_cache), jax.tree.leaves(got)):
+        assert want.dtype == have.dtype
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(have))
+
+
+def test_kv_migrate_local_pattern(tiny_model):
+    """Pure-local migrate (src == dst): blocks land at the lane's block
+    addresses, the coalesced reply balances the credit, no error bits."""
+    model, params = tiny_model
+    ctx, gas, kv = make_kv(model)
+    worker = PrefillWorker(model, params, SLOTS, kernel_id=0)
+    _, lane_cache = worker.prefill(np.asarray([7, 8, 30], np.int32))
+    blocks = tuple(kv.pack_lane(lane_cache))
+
+    def prog(st):
+        return kv.migrate(st, blocks, LOCAL, lane=1)
+
+    out = jax.jit(gas.spmd(prog))(gas.make_global_state())
+    assert int(np.asarray(out.error)[0]) == 0
+    assert int(np.asarray(out.credits)[0][MIGRATE_TOKEN]) == 0
+    got = kv.unpack_lane(np.asarray(out.segment)[0], 1)
+    for want, have in zip(jax.tree.leaves(lane_cache), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(have))
+
+
+# -- migrated adoption vs in-place oracle ------------------------------------
+
+def test_migrated_adoption_matches_oracle(tiny_model):
+    """A request prefetched on a worker, round-tripped through the PGAS
+    segment layout and adopted mid-stream decodes to exactly the tokens
+    the engine's own submit path produces — with mixed lane progress and
+    ragged prompt lengths."""
+    model, params = tiny_model
+    ctx, gas, kv = make_kv(model)
+    worker = PrefillWorker(model, params, SLOTS, kernel_id=0)
+    prompts = [[3, 14, 15, 9, 2], [7, 8], [30, 2, 9]]
+    max_new = [6, 4, 5]
+
+    def place_adopt(eng, req):
+        lane = eng.find_free_lane()
+        logits, lane_cache = worker.prefill(req.prompt)
+        tok = eng._sample(np.asarray(logits))
+        seg = np.zeros(ctx.segment_words, np.float32)
+        for a, b in zip(kv.block_addrs(lane), kv.pack_lane(lane_cache)):
+            arr = np.asarray(b)
+            seg[a:a + arr.size] = arr
+        req.out.append(int(tok))
+        eng.adopt_lane(lane, kv.unpack_lane(seg, lane), req,
+                       pos=len(req.prompt), last_tok=int(tok))
+
+    def drive(place):
+        eng = ServeEngine(model, params, lanes=2, slots=SLOTS)
+        reqs = [Request(i, np.asarray(p, np.int32), m)
+                for i, (p, m) in enumerate(zip(prompts, max_new))]
+        place(eng, reqs[0])
+        eng.step(), eng.step()
+        place(eng, reqs[1])          # lane 1 joins two steps behind lane 0
+        while not reqs[2].out:
+            if eng.find_free_lane() is not None:
+                place(eng, reqs[2])  # reuse whichever lane freed first
+            else:
+                eng.step()
+        while not eng.idle:
+            eng.step()
+        eng.drain()
+        return [r.out for r in reqs]
+
+    oracle = drive(lambda eng, req: eng.submit(req))
+    migrated = drive(place_adopt)
+    assert migrated == oracle
+    assert [len(o) for o in oracle] == max_new
+
+
+def test_adopt_lane_refuses_busy_lane(tiny_model):
+    model, params = tiny_model
+    eng = ServeEngine(model, params, lanes=1, slots=SLOTS)
+    eng.submit(Request(0, np.asarray([1, 2], np.int32), 4))
+    lane_cache = lane_slice(eng.cache, 0)
+    with pytest.raises(ValueError, match="busy"):
+        eng.adopt_lane(0, lane_cache, Request(1, np.asarray([3], np.int32), 2),
+                       pos=1, last_tok=0)
+
+
+# -- satellite: engine drain --------------------------------------------------
+
+def test_engine_drain_delivers_trailing_events(tiny_model):
+    """A stream ending between steps used to strand sub-watermark events
+    in the mailbox; drain() must force the final delivery."""
+    model, params = tiny_model
+    batches = []
+    eng = ServeEngine(model, params, lanes=1, slots=SLOTS,
+                      event_sink=batches.append, event_watermark=64)
+    eng.submit(Request(0, np.asarray([1, 2, 3], np.int32), 2))
+    assert batches == []            # acquire is pending, below watermark
+    out = eng.drain()
+    assert [e.kind for e in out] == ["acquire"]
+    assert batches == [out]
+    assert eng.events.pending == 0
+    assert eng.drain() == []        # idempotent
+
+
+def test_engine_run_ends_drained(tiny_model):
+    model, params = tiny_model
+    batches = []
+    eng = ServeEngine(model, params, lanes=1, slots=SLOTS,
+                      event_sink=batches.append, event_watermark=64)
+    eng.run([Request(i, np.asarray([i + 1, i + 2], np.int32), 2)
+             for i in range(2)])
+    assert eng.events.pending == 0
+    kinds = [e.kind for b in batches for e in b]
+    assert kinds.count("acquire") == 2 and kinds.count("release") == 2
+
+
+# -- satellite: address-space range errors ------------------------------------
+
+def test_global_addr_range_errors():
+    ctx, gas = make_gas(segment_words=64)
+    assert gas.global_addr(0, 63) == 63
+    with pytest.raises(ValueError, match="kernel 1 out of range"):
+        gas.global_addr(1, 0)
+    with pytest.raises(ValueError, match=r"offset 64 outside the 64-word"):
+        gas.global_addr(0, 64)
+    with pytest.raises(ValueError, match="kernel 0"):
+        gas.global_addr(0, -1)
+
+
+def test_check_local_range_and_vectored_addrs():
+    ctx, gas = make_gas(segment_words=64)
+    assert gas.check_local_range(0, 60, 4) == 60
+    with pytest.raises(ValueError, match="overruns"):
+        gas.check_local_range(0, 60, 5)
+    assert gas.vectored_addrs(0, 8, [4, 4]) == [8, 12]
+    assert gas.vectored_addrs(0, 8, [4, 4], stride=16) == [8, 24]
+    with pytest.raises(ValueError, match="overruns"):
+        gas.vectored_addrs(0, 50, [4, 8], stride=8)    # 2nd block ends at 66
+    with pytest.raises(ValueError, match="outside the"):
+        gas.vectored_addrs(0, 56, [4, 4], stride=16)   # 2nd block starts at 72
+
+
+def test_put_long_vectored_validation():
+    ctx, gas = make_gas(segment_words=64)
+    st = ctx.make_state()
+    blocks = [jnp.ones(2, jnp.float32), jnp.ones(3, jnp.float32)]
+    with pytest.raises(ValueError, match="one destination address per block"):
+        ops.put_long_vectored(ctx, st, blocks, LOCAL, [4])
+    tiny_mtu = dataclasses.replace(TCP, max_packet_bytes=64)   # 16 words
+    ctx2, _ = make_gas(segment_words=64, transport=tiny_mtu)
+    big = [jnp.ones(8, jnp.float32), jnp.ones(7, jnp.float32)]
+    with pytest.raises(ValueError, match="do not segment"):
+        ops.put_long_vectored(ctx2, ctx2.make_state(), big, LOCAL, [0, 8])
+
+
+# -- satellite: ReplyMailbox traced-token message ------------------------------
+
+def test_reply_mailbox_traced_token_names_the_fix():
+    ctx, _ = make_gas()
+    rmb = ctx.reply_mailbox()
+
+    def probe(t):
+        with pytest.raises(ValueError) as ei:
+            rmb.note(LOCAL, t)
+        msg = str(ei.value)
+        assert "static" in msg
+        assert "flush" in msg and "reply_via=None" in msg
+        return t
+
+    jax.jit(probe)(jnp.asarray(3))
+    assert rmb.pending == 0         # the failed note recorded nothing
+
+
+# -- serving slices (pure topology logic) --------------------------------------
+
+def test_serving_slices():
+    s = ServingSlices(n_prefill=2, n_decode=3)
+    assert s.num_kernels == 5
+    assert s.prefill_ids == (0, 1) and s.decode_ids == (2, 3, 4)
+    assert s.role_of(1) == "prefill" and s.role_of(4) == "decode"
+    assert s.migration_pattern(0, 3) == [(0, 3)]
+    with pytest.raises(ValueError, match="not in the prefill"):
+        s.migration_pattern(3, 2)
+    with pytest.raises(ValueError, match="not in the decode"):
+        s.migration_pattern(0, 1)
+    with pytest.raises(ValueError, match="outside"):
+        s.role_of(5)
+    with pytest.raises(ValueError, match=">= 1"):
+        ServingSlices(n_prefill=0, n_decode=1)
+
+
+# -- admission front-end -------------------------------------------------------
+
+class FakeEngine:
+    """Pure-python ServeEngine stand-in: same scheduler surface, same
+    EventMailbox accounting, no XLA."""
+
+    def __init__(self, lanes=2, steps=3):
+        self.events = EventMailbox(watermark=1000)
+        self.active = [None] * lanes
+        self._left = [0] * lanes
+        self.steps = steps
+
+    def find_free_lane(self):
+        for lane, cur in enumerate(self.active):
+            if cur is None:
+                return lane
+        return None
+
+    def submit(self, req):
+        lane = self.find_free_lane()
+        if lane is None:
+            return False
+        self.active[lane] = req
+        self._left[lane] = self.steps
+        req.out.append(1)
+        self.events.send(SlotEvent("acquire", lane, req.rid))
+        return True
+
+    def step(self):
+        for lane, req in enumerate(self.active):
+            if req is None:
+                continue
+            req.out.append(0)
+            self._left[lane] -= 1
+            if self._left[lane] <= 0:
+                req.done = True
+                self.active[lane] = None
+                self.events.send(SlotEvent("release", lane, req.rid))
+        self.events.flush()
+
+    @property
+    def idle(self):
+        return all(r is None for r in self.active)
+
+    def drain(self):
+        return self.events.flush()
+
+
+def test_frontend_backpressure_rejects_beyond_bound():
+    fe = ServeFrontend(FakeEngine(lanes=1, steps=2), max_queue=2)
+    jobs = [fe.submit([1, 2], max_new=3) for _ in range(5)]
+    assert [j.status for j in jobs] == [QUEUED, QUEUED,
+                                        REJECTED, REJECTED, REJECTED]
+    assert fe.queue_depth == 2 and fe.peak_queue_depth == 2
+    fe.run_until_idle()
+    assert [j.status for j in jobs[:2]] == [DONE, DONE]
+    assert fe.peak_queue_depth <= fe.max_queue
+    with pytest.raises(ValueError, match="rejected"):
+        fe.result(jobs[2].rid)
+    stats = fe.stats()
+    assert stats["admitted"] == 2 and stats["rejected"] == 3
+    assert stats["completed"] == 2 and stats["busy_lanes"] == 0
+
+
+def test_frontend_status_flow_is_event_driven():
+    fe = ServeFrontend(FakeEngine(lanes=1, steps=2), max_queue=4)
+    job = fe.submit([5], max_new=3)
+    assert fe.status(job.rid) == QUEUED
+    assert fe.result(job.rid) is None
+    fe.pump()
+    assert fe.status(job.rid) == RUNNING
+    assert fe.stats()["busy_lanes"] == 1      # acquire event landed
+    while fe.pump():
+        pass
+    assert fe.status(job.rid) == DONE         # release event marked it
+    assert fe.result(job.rid) == job.request.out
+    with pytest.raises(KeyError):
+        fe.status(999)
+
+
+def test_frontend_runner_thread():
+    fe = ServeFrontend(FakeEngine(lanes=2, steps=2), max_queue=8)
+    fe.start(poll_s=0.0005)
+    try:
+        jobs = [fe.submit([i], max_new=3) for i in range(6)]
+        deadline = time.monotonic() + 10
+        while (any(j.status != DONE for j in jobs)
+               and time.monotonic() < deadline):
+            time.sleep(0.002)
+    finally:
+        fe.stop()
+    assert all(j.status == DONE for j in jobs)
+    with pytest.raises(RuntimeError, match="already started"):
+        fe.start(), fe.start()
+    fe.stop()
+
+
+def test_frontend_over_real_engine(tiny_model):
+    model, params = tiny_model
+    eng = ServeEngine(model, params, lanes=1, slots=SLOTS)
+    fe = ServeFrontend(eng, max_queue=4)
+    jobs = [fe.submit([i + 1, i + 2], max_new=3) for i in range(3)]
+    fe.run_until_idle()
+    assert all(j.status == DONE for j in jobs)
+    assert all(len(fe.result(j.rid)) == 3 for j in jobs)
+    assert eng.events.pending == 0
+
+
+# -- multi-kernel semantics (subprocess with its own device count) -------------
+
+def test_serving_subprocess_checks():
+    out = run_subprocess_checks("serving_checks.py", n_devices=4)
+    assert "SERVING_CHECKS_OK" in out

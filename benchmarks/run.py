@@ -19,8 +19,12 @@ future regression is visible as a diff against both.
 ``--smoke`` is the fast pre-merge mode driven by ``scripts/ci_check.sh``:
 it runs only ``bench_comm`` (with ``BENCH_SMOKE=1``, few timing iters,
 no big Jacobi grid), asserts every comm row's collective-permute budget
-including the mailbox messages-per-collective floor, and does NOT
-rewrite ``BENCH_comm.json``.
+including the mailbox messages-per-collective floor, then runs
+``scripts/comm_lint.py`` (shoal-lint, both passes) over every
+registered entry point — failing on any finding — and merges the
+analyzer wall-time + HLO budget table into ``BENCH_comm.json`` under
+``current.comm_lint`` (the comm/benches/baseline sections are left
+untouched).
 
 ``--serving`` is the disaggregated-serving smoke mode: it runs
 ``bench_serving`` (mixed prefill/decode arrival trace through the
@@ -154,8 +158,47 @@ def smoke() -> None:
         for f in failures:
             print(f"SMOKE_FAIL {f}")
         raise SystemExit(1)
+    lint = run_comm_lint()
     print(f"SMOKE_OK ({len(SMOKE_BUDGETS)} collective budgets, "
-          f"{len(SMOKE_FLOORS)} aggregation floors)")
+          f"{len(SMOKE_FLOORS)} aggregation floors, "
+          f"{len(lint['entries'])} lint entries in "
+          f"{lint['total_wall_time_s']:.1f}s)")
+
+
+def run_comm_lint() -> dict:
+    """Run scripts/comm_lint.py (both analyzer passes over every
+    registered entry point) in a subprocess, fail the smoke on findings,
+    and merge the analyzer wall-time + HLO budget table into
+    BENCH_comm.json under ``current.comm_lint`` (other sections and the
+    frozen baseline are left untouched)."""
+    import subprocess
+    import tempfile
+
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as tmp:
+        path = tmp.name
+    try:
+        proc = subprocess.run(
+            [sys.executable, os.path.join(REPO, "scripts", "comm_lint.py"),
+             "--json", path],
+            capture_output=True, text=True, timeout=900)
+        sys.stdout.write(proc.stdout)
+        if proc.returncode:
+            sys.stderr.write(proc.stderr[-4000:])
+            raise SystemExit(
+                f"SMOKE_FAIL shoal-lint found issues (rc={proc.returncode})")
+        with open(path) as f:
+            lint = json.load(f)
+    finally:
+        os.unlink(path)
+    doc = {"schema": "bench_comm/v1"}
+    if os.path.exists(BENCH_JSON):
+        with open(BENCH_JSON) as f:
+            doc = json.load(f)
+    doc.setdefault("current", {})["comm_lint"] = lint
+    with open(BENCH_JSON, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return lint
 
 
 # --serving gates: the KV migration's collective budget (1 fused

@@ -12,6 +12,9 @@ export PYTHONPATH="$REPO/src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 test suite =="
 python -m pytest -x -q
 
+echo "== shoal-lint (comm-safety + collective budgets) =="
+python scripts/comm_lint.py
+
 echo "== collective budget tests =="
 python -m pytest -x -q tests/test_collective_budget.py
 

@@ -1,0 +1,97 @@
+#!/usr/bin/env python
+"""shoal-lint CLI: run both comm-safety passes over registered entry
+points (see README "Static analysis").
+
+Pass 1 re-traces each program under an event recorder and checks rules
+R1-R4 (races, credit flow, addressing); pass 2 compiles it and diffs
+collective counts/bytes against ``comm_budgets.toml`` (rule B1).  Any
+unwaived finding exits non-zero — this is the CI gate.
+
+Usage::
+
+    python scripts/comm_lint.py                    # all entries
+    python scripts/comm_lint.py --entry jacobi --entry kv-migrate
+    python scripts/comm_lint.py --list
+    python scripts/comm_lint.py --json out.json    # machine-readable
+
+Must set the forced host-device count before jax imports, so keep the
+os.environ block above every repro/jax import.
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _force_devices(n: int) -> None:
+    flag = f"--xla_force_host_platform_device_count={n}"
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = f"{flags} {flag}".strip()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--entry", action="append", default=None,
+                    help="entry point to lint (repeatable; default: all)")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered entry points and exit")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write a machine-readable report to PATH")
+    ap.add_argument("--budgets", metavar="TOML", default=None,
+                    help="budget file (default: repo comm_budgets.toml)")
+    ap.add_argument("--no-hlo", action="store_true",
+                    help="skip pass 2 (no compile, jaxpr lint only)")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="forced host device count (default 8)")
+    args = ap.parse_args(argv)
+
+    _force_devices(args.devices)
+    sys.path.insert(0, os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+    from repro.analysis import hlo_budget, registry
+
+    if args.list:
+        for e in registry.ENTRIES:
+            print(f"{e.name:16s} {e.description}")
+        return 0
+
+    names = args.entry or registry.names()
+    budgets = None
+    if not args.no_hlo:
+        budgets = hlo_budget.load_budgets(args.budgets)
+
+    t0 = time.perf_counter()
+    doc = {"entries": {}, "total_wall_time_s": 0.0}
+    failed = False
+    for name in names:
+        rep = registry.run_entry(name, budgets=budgets,
+                                 include_hlo=not args.no_hlo)
+        print(rep.render())
+        failed = failed or not rep.ok
+        doc["entries"][name] = {
+            "ok": rep.ok,
+            "n_events": rep.n_events,
+            "tags_recovered": rep.tags_recovered,
+            "wall_time_s": round(rep.wall_time_s, 3),
+            "findings": [f.render() for f in rep.findings],
+            "budget": rep.budget,
+        }
+    doc["total_wall_time_s"] = round(time.perf_counter() - t0, 3)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+
+    print(f"shoal-lint: {len(names)} entr{'y' if len(names) == 1 else 'ies'} "
+          f"in {doc['total_wall_time_s']:.1f}s: "
+          f"{'FINDINGS' if failed else 'clean'}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -31,6 +31,7 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import trace as _lint
 from repro.core import am
 from repro.core import gascore as gc
 from repro.core import handlers as hd
@@ -86,6 +87,7 @@ class Mailbox:
         self.reply_via = reply_via
         self._fields: list[dict] = []
         self._payloads: list = []
+        self._lint_rows: list[tuple] = []   # (class, addr, nwords, handler, token)
         self._tx_words = 0
         self.flushes = 0
         self.msgs_sent = 0
@@ -142,9 +144,13 @@ class Mailbox:
                 "(payload to kernel) has no coalesced ingress")
         t = am.make_type(msg_class, asynchronous=True,
                          fifo=msg_class == am.LONG)
+        row_token = self.token if token is None else token
         self._fields.append(dict(
             type=t, nwords=nwords, dst_addr=dst_addr, handler=handler,
-            token=self.token if token is None else token))
+            token=row_token))
+        self._lint_rows.append((msg_class, _lint.static_int(dst_addr),
+                                nwords, _lint.static_int(handler),
+                                _lint.static_int(row_token)))
         self._payloads.append(row)
         self._tx_words += nwords
         self.msgs_sent += 1
@@ -182,34 +188,50 @@ class Mailbox:
         n = len(self._fields)
         if n == 0:
             return state
-        cols = {name: self._stack_column(name) for name in _ROW_FIELDS}
-        hdrs = am.encode_batch(
-            n, src=self.ctx.my_id(), dst=ops._dst_of(self.ctx, self.pattern),
-            **cols)
         acked = self.ctx.transport.acked
-        if acked:
-            # one ack per flush: only the final row requests a reply
-            # (clear async BEFORE masking so non-senders stay all-NOP)
-            hdrs = hdrs.at[n - 1, 0].set(hdrs[n - 1, 0] & ~am.FLAG_ASYNC)
-        hdrs = ops._mask_nonparticipants(self.ctx, self.pattern, hdrs)
-        pays = self._stack_payloads()
-        state = gc.dataclasses_replace(
-            state, tx_words=state.tx_words + jnp.where(
-                ops._is_sender(self.ctx, self.pattern), self._tx_words, 0))
-        hdr_r, pay_r = ops._exchange(self.ctx, self.pattern, hdrs, pays)
-        state = gc.ingress_stack(self.ctx, state, hdr_r, pay_r,
-                                 self.msg_words)
-        if acked:
-            # the ack is accounted on the mailbox token, not whatever
-            # per-message token the final row happened to carry
-            h_last = dataclasses.replace(
-                am.decode(hdr_r[n - 1]),
-                token=jnp.asarray(self.token, jnp.int32))
-            state = ops._deliver_reply(self.ctx, state, self.pattern, h_last,
-                                       token=self.token,
-                                       reply_via=self.reply_via)
+        w_ivs, grants = [], []
+        for cls, addr, nw, h_s, tok in self._lint_rows:
+            if cls == am.LONG and nw:
+                w_ivs.append(_lint.Interval(addr, nw))
+            elif (cls == am.SHORT and h_s == hd.H_ADD
+                  and addr is not None and tok is not None):
+                grants.append((tok, addr))   # Short rows: dst_addr = arg
+        tag = _lint.emit(
+            "mailbox_flush", self.pattern, writes=tuple(w_ivs),
+            token=self.token, acked=acked,
+            deferred_reply=self.reply_via is not None,
+            credit_grants=tuple(grants), mailbox_id=id(self),
+            segment_words=self.ctx.segment_words, detail={"rows": n})
+        with _lint.scope(tag):
+            cols = {name: self._stack_column(name) for name in _ROW_FIELDS}
+            hdrs = am.encode_batch(
+                n, src=self.ctx.my_id(),
+                dst=ops._dst_of(self.ctx, self.pattern), **cols)
+            if acked:
+                # one ack per flush: only the final row requests a reply
+                # (clear async BEFORE masking so non-senders stay all-NOP)
+                hdrs = hdrs.at[n - 1, 0].set(hdrs[n - 1, 0] & ~am.FLAG_ASYNC)
+            hdrs = ops._mask_nonparticipants(self.ctx, self.pattern, hdrs)
+            pays = self._stack_payloads()
+            state = gc.dataclasses_replace(
+                state, tx_words=state.tx_words + jnp.where(
+                    ops._is_sender(self.ctx, self.pattern),
+                    self._tx_words, 0))
+            hdr_r, pay_r = ops._exchange(self.ctx, self.pattern, hdrs, pays)
+            state = gc.ingress_stack(self.ctx, state, hdr_r, pay_r,
+                                     self.msg_words)
+            if acked:
+                # the ack is accounted on the mailbox token, not whatever
+                # per-message token the final row happened to carry
+                h_last = dataclasses.replace(
+                    am.decode(hdr_r[n - 1]),
+                    token=jnp.asarray(self.token, jnp.int32))
+                state = ops._deliver_reply(self.ctx, state, self.pattern,
+                                           h_last, token=self.token,
+                                           reply_via=self.reply_via)
         self._fields.clear()
         self._payloads.clear()
+        self._lint_rows.clear()
         self._tx_words = 0
         self.flushes += 1
         return state

@@ -1,0 +1,49 @@
+"""shoal-lint: trace-time PGAS comm-safety analysis (see README
+"Static analysis").
+
+Pass 1 (:mod:`.jaxpr_lint`) records the comm schedule while tracing and
+runs rules R1-R4 (:mod:`.rules`) over it; pass 2 (:mod:`.hlo_budget`)
+diffs compiled-HLO collective counts against ``comm_budgets.toml``.
+Both produce the shared :class:`.report.Report` model;
+:mod:`.registry` names the entry points CI runs them over.
+
+This ``__init__`` stays import-light on purpose: :mod:`repro.core.ops`
+imports :mod:`.trace` at module load, so pulling in the linter (which
+imports jax transforms) or the registry (which imports apps/serving)
+here would be a cycle.  Those resolve lazily via ``__getattr__``.
+"""
+
+from repro.analysis.report import (CommLintError, ERROR, Finding, Report,
+                                   RULES, WARNING)
+from repro.analysis.trace import (CommEvent, Interval, Recorder, emit,
+                                  record, scope, waiver)
+
+__all__ = [
+    "CommEvent", "CommLintError", "ERROR", "Finding", "Interval",
+    "Recorder", "Report", "RULES", "WARNING", "analyze", "emit",
+    "hlo_budget", "jaxpr_lint", "lint", "lint_clean", "lint_events",
+    "record", "registry", "rules", "scope", "trace", "waiver",
+]
+
+_LAZY = {
+    "lint": ("repro.analysis.jaxpr_lint", "lint"),
+    "lint_clean": ("repro.analysis.jaxpr_lint", "lint_clean"),
+    "lint_events": ("repro.analysis.jaxpr_lint", "lint_events"),
+    "analyze": ("repro.analysis.rules", "analyze"),
+    "jaxpr_lint": ("repro.analysis.jaxpr_lint", None),
+    "hlo_budget": ("repro.analysis.hlo_budget", None),
+    "registry": ("repro.analysis.registry", None),
+    "rules": ("repro.analysis.rules", None),
+    "trace": ("repro.analysis.trace", None),
+}
+
+
+def __getattr__(name):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    mod = importlib.import_module(mod_name)
+    return mod if attr is None else getattr(mod, attr)

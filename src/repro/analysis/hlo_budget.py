@@ -1,0 +1,138 @@
+"""Pass 2: compiled-HLO collective budgets (the generalization of
+``tests/hlo_budget_checks.py``).
+
+The measured side reuses :func:`repro.launch.hlo_analysis.parse_collectives`
+— trip-count-weighted collective counts and ring-model bytes-on-wire per
+compiled program.  The declared side is the checked-in
+``comm_budgets.toml`` at the repo root: one ``[section]`` per budgeted
+program, keys of the form ``<metric>_max`` / ``<metric>_exact`` where
+``metric`` is one of::
+
+    collective_permute  all_to_all  all_gather  all_reduce
+    reduce_scatter      total_collectives       wire_bytes
+
+Violations become rule-B1 findings in the same report model as pass 1,
+so the CLI / CI / pytest fixture treat "too many collectives" exactly
+like a race.  A budgeted program with *no* section is a B1 warning —
+budgets must stay checked in, or regressions land silently.
+
+Python 3.10 has no ``tomllib``, so a deliberately tiny parser handles
+the subset the budget file uses (sections, numeric/string/bool values,
+comments).  Anything it cannot parse is a hard error, not a guess.
+"""
+
+from __future__ import annotations
+
+import os
+
+from repro.analysis.report import ERROR, WARNING, Finding
+from repro.launch.hlo_analysis import CollectiveStats, parse_collectives
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))
+DEFAULT_BUDGETS_PATH = os.path.join(_REPO_ROOT, "comm_budgets.toml")
+
+# budget-key metric -> CollectiveStats.ops kind (None = derived metric)
+_KINDS = {
+    "collective_permute": "collective-permute",
+    "all_to_all": "all-to-all",
+    "all_gather": "all-gather",
+    "all_reduce": "all-reduce",
+    "reduce_scatter": "reduce-scatter",
+}
+
+
+def parse_budget_toml(text: str) -> dict[str, dict]:
+    """Parse the comm_budgets.toml subset: [sections] of key = value."""
+    out: dict[str, dict] = {}
+    cur: dict | None = None
+    for lineno, raw in enumerate(text.splitlines(), 1):
+        line = raw.split("#", 1)[0].strip()
+        if not line:
+            continue
+        if line.startswith("[") and line.endswith("]"):
+            name = line[1:-1].strip().strip('"')
+            cur = out.setdefault(name, {})
+            continue
+        if "=" not in line or cur is None:
+            raise ValueError(
+                f"comm_budgets.toml line {lineno}: cannot parse {raw!r}")
+        key, val = (s.strip() for s in line.split("=", 1))
+        if val.startswith('"') and val.endswith('"'):
+            cur[key] = val[1:-1]
+        elif val in ("true", "false"):
+            cur[key] = val == "true"
+        else:
+            try:
+                num = float(val)
+            except ValueError:
+                raise ValueError(
+                    f"comm_budgets.toml line {lineno}: bad value {val!r}")
+            cur[key] = int(num) if num.is_integer() and "." not in val \
+                and "e" not in val.lower() else num
+    return out
+
+
+def load_budgets(path: str | None = None) -> dict[str, dict]:
+    with open(path or DEFAULT_BUDGETS_PATH) as f:
+        return parse_budget_toml(f.read())
+
+
+def measure(hlo_text: str) -> CollectiveStats:
+    """Collective stats of one compiled program (pass-2 measurement)."""
+    return parse_collectives(hlo_text)
+
+
+def _metric(stats: CollectiveStats, base: str) -> float | None:
+    if base == "total_collectives":
+        return float(sum(stats.ops.values()))
+    if base == "wire_bytes":
+        return float(stats.wire_bytes)
+    kind = _KINDS.get(base)
+    return None if kind is None else float(stats.ops.get(kind, 0.0))
+
+
+def check_budget(entry: str, stats: CollectiveStats,
+                 spec: dict | None) -> list[Finding]:
+    """Diff measured stats against one budget section; B1 findings."""
+    if not spec:
+        return [Finding(
+            rule="B1", severity=WARNING,
+            message=(f"no [{entry}] section in comm_budgets.toml — "
+                     "declare a collective budget so wire-cost "
+                     "regressions in this program are caught"))]
+    out: list[Finding] = []
+    for key, want in spec.items():
+        if isinstance(want, str):            # note/doc keys
+            continue
+        if key.endswith("_max"):
+            base, exact = key[:-4], False
+        elif key.endswith("_exact"):
+            base, exact = key[:-6], True
+        else:
+            raise ValueError(
+                f"comm_budgets.toml [{entry}]: unknown key {key!r} "
+                "(want <metric>_max or <metric>_exact)")
+        got = _metric(stats, base)
+        if got is None:
+            raise ValueError(
+                f"comm_budgets.toml [{entry}]: unknown metric {base!r}")
+        bad = (abs(got - want) > 1e-6) if exact else (got > want + 1e-6)
+        if bad:
+            rel = "!=" if exact else ">"
+            out.append(Finding(
+                rule="B1", severity=ERROR,
+                message=(f"{entry}: measured {base.replace('_', '-')} "
+                         f"{got:g} {rel} declared budget {want:g} — the "
+                         "compiled program's wire cost drifted from "
+                         f"comm_budgets.toml [{entry}]")))
+    return out
+
+
+def budget_row(stats: CollectiveStats, spec: dict | None) -> dict:
+    """JSON-ready table row: measured counts/bytes + declared budget."""
+    return {
+        "ops": {k: round(v, 3) for k, v in sorted(stats.ops.items())},
+        "wire_bytes": round(float(stats.wire_bytes), 1),
+        "budget": dict(spec or {}),
+    }

@@ -1,0 +1,86 @@
+"""Pass-1 driver: trace a program, record its comm schedule, lint it.
+
+``lint(fn, *args)`` re-traces ``fn`` under a fresh event recorder
+(:mod:`repro.analysis.trace`), runs the R1-R4 rules over the recorded
+schedule, and cross-checks that the events are recoverable from the
+closed jaxpr's ``shoal.*`` named scopes — the post-trace tagging the
+whole analyzer hangs off.
+
+jit-cache hazard: ``jax.make_jaxpr`` on an already-jitted callable can
+hit the pjit trace cache and *skip the Python body*, so no events would
+be recorded even though the jaxpr is full of comm ops.  We unwrap
+``__wrapped__`` (``jax.jit`` preserves it) down to the raw traceable and
+treat "tags in the jaxpr but zero events recorded" as an infrastructure
+error rather than a clean report.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.analysis import rules, trace
+from repro.analysis.report import CommLintError, Report
+
+
+def _unwrap(fn):
+    """Strip ``jax.jit`` layers only.
+
+    The pjit wrapper is the one with a trace cache; a ``shard_map``
+    wrapper also carries ``__wrapped__`` but must stay in place — its
+    body binds the mesh axes (``axis_index`` inside would be unbound).
+    """
+    seen: set[int] = set()
+    while isinstance(fn, jax.stages.Wrapped) \
+            and hasattr(fn, "__wrapped__") and id(fn) not in seen:
+        seen.add(id(fn))
+        fn = fn.__wrapped__
+    return fn
+
+
+def lint(fn, *args, name: str | None = None) -> Report:
+    """Trace ``fn(*args)``, record its comm schedule, run rules R1-R4.
+
+    ``fn`` may be jitted and/or shard_mapped; it is unwrapped to the raw
+    traceable first so the Python body (and its ``emit`` calls) actually
+    runs.  Returns a :class:`Report`; raising on findings is
+    :func:`lint_clean`'s job.
+    """
+    target = _unwrap(fn)
+    if name is None:
+        name = getattr(target, "__name__", None) or repr(fn)
+    t0 = time.perf_counter()
+    with trace.record() as rec:
+        closed = jax.make_jaxpr(target)(*args)
+    tags = trace.recover_tags(closed)
+    if tags and not rec.events:
+        raise RuntimeError(
+            f"shoal-lint {name}: the jaxpr carries {len(tags)} shoal.* "
+            "tag(s) but tracing recorded no events — a trace cache "
+            "served the jaxpr without running the Python body. Lint the "
+            "unjitted callable (or a fresh closure) instead.")
+    rep = Report(entry=name, n_events=len(rec.events),
+                 tags_recovered=len(tags))
+    rep.extend(rules.analyze(rec.events))
+    rep.wall_time_s = time.perf_counter() - t0
+    return rep
+
+
+def lint_events(events, name: str = "<schedule>") -> Report:
+    """Lint an explicit event schedule (no tracing) — the entry point
+    for synthetic/fuzzed schedules in tests."""
+    rep = Report(entry=name, n_events=len(events))
+    return rep.extend(rules.analyze(list(events)))
+
+
+def lint_clean(fn, *args, name: str | None = None) -> Report:
+    """Assert ``fn`` has no unwaived findings; the pytest-facing form.
+
+    Raises :class:`CommLintError` (an AssertionError) rendering every
+    finding when the program is not clean; returns the report otherwise.
+    """
+    rep = lint(fn, *args, name=name)
+    if not rep.ok:
+        raise CommLintError(rep)
+    return rep

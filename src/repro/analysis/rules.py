@@ -1,0 +1,282 @@
+"""Comm-safety rules R1-R4 over a recorded event schedule.
+
+The analyzer input is the ordered list of :class:`~repro.analysis.trace.
+CommEvent`s one Python trace of the program produced (SPMD dataflow: the
+trace IS the schedule; a ``lax.scan`` body contributes one loop
+instance).  The rules model the *paper's* asynchronous PGAS semantics —
+an AM is in flight from issue until an ordering point covers it — not
+the lockstep emulation, so hazards that today's collectivized lowering
+happens to serialize are still reported: they become real the moment the
+transport is an actual NIC.
+
+Ordering model (happens-before at the destination):
+
+* ``barrier`` orders every earlier event before every later one;
+* ``wait_replies(token=t)`` orders every earlier *acked* event on
+  ``t`` before every later event (for acks deferred through a
+  ReplyMailbox, only once a credit-grant for ``t`` has also been
+  issued);
+* asynchronous events are only ever ordered by a barrier.
+
+Traced operands degrade conservatively: an unknown interval may alias
+anything, an unknown token makes every token's balance unknown.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.report import ERROR, WARNING, Finding
+from repro.analysis.trace import (CommEvent, Interval, READ_OPS, WRITE_OPS)
+
+
+def _waiver_of(*events: CommEvent) -> str | None:
+    for ev in events:
+        if ev.waiver:
+            return ev.waiver
+    return None
+
+
+def _common_dsts(a: CommEvent, b: CommEvent) -> tuple[int, ...]:
+    return tuple(sorted(set(a.dsts) & set(b.dsts)))
+
+
+def _grant_indices(events, token: int | None):
+    """Indices of events that grant credits on ``token``."""
+    out = []
+    for k, ev in enumerate(events):
+        if any(t == token for t, _ in ev.credit_grants):
+            out.append(k)
+    return out
+
+
+def _ordered_before(events, i: int, j: int) -> bool:
+    """True when an ordering point between events i and j covers event i."""
+    ei = events[i]
+    for k in range(i + 1, j):
+        ev = events[k]
+        if ev.op == "barrier":
+            return True
+        if ev.op == "wait_replies" and ei.acked and ei.token is not None \
+                and ev.token == ei.token:
+            if not ei.deferred_reply:
+                return True
+            if any(i < g < k for g in _grant_indices(events, ei.token)):
+                return True
+    return False
+
+
+def _overlapping(a: CommEvent, b: CommEvent):
+    """First overlapping (interval, interval) pair, or None."""
+    for wa in a.writes:
+        for wb in b.writes:
+            if wa.overlaps(wb):
+                return wa, wb
+    return None
+
+
+# --------------------------------------------------------------------------
+# R1: write-write overlap without ordering
+# --------------------------------------------------------------------------
+
+def check_r1(events) -> list[Finding]:
+    out: list[Finding] = []
+    writes = [(i, ev) for i, ev in enumerate(events) if ev.op in WRITE_OPS]
+    for a in range(len(writes)):
+        i, ei = writes[a]
+        # intra-op hazard: the pre-PR6 strided class (vectorized ingress
+        # over aliasing blocks scatters in undefined lane order)
+        if ei.self_overlap and ei.op == "put_long_strided":
+            out.append(Finding(
+                rule="R1", severity=ERROR, events=(ei.seq,),
+                sites=(ei.site(),), waived=ei.waiver,
+                message=(f"strided put {ei.site()} has aliasing blocks "
+                         f"(stride {ei.detail.get('stride')} < blk_words "
+                         f"{ei.detail.get('blk_words')}) on the unordered "
+                         "vectorized ingress: scatter lane order is "
+                         "undefined, so last-writer-wins and accumulate "
+                         "handlers are both wrong (pass overlap=True or "
+                         "drop the override)")))
+        for b in range(a + 1, len(writes)):
+            j, ej = writes[b]
+            common = _common_dsts(ei, ej)
+            if not common:
+                continue
+            pair = _overlapping(ei, ej)
+            if pair is None:
+                continue
+            if _ordered_before(events, i, j):
+                continue
+            wa, wb = pair
+            out.append(Finding(
+                rule="R1", severity=ERROR, events=(ei.seq, ej.seq),
+                sites=(ei.site(), ej.site()), waived=_waiver_of(ei, ej),
+                message=(f"{ei.site()} writes {wa} and {ej.site()} writes "
+                         f"{wb} at kernel(s) {list(common)} with no "
+                         "ordering (wait_replies on the first op's token, "
+                         "or a barrier) between them — destination value "
+                         "depends on arrival order")))
+    return out
+
+
+# --------------------------------------------------------------------------
+# R2: read overlapping an in-flight write
+# --------------------------------------------------------------------------
+
+def check_r2(events) -> list[Finding]:
+    out: list[Finding] = []
+    for j, ej in enumerate(events):
+        if ej.op not in READ_OPS or not ej.reads:
+            continue
+        for i in range(j):
+            ei = events[i]
+            if ei.op not in WRITE_OPS or not ei.writes:
+                continue
+            common = _common_dsts(ei, ej)
+            if not common:
+                continue
+            hit = None
+            for r in ej.reads:
+                for w in ei.writes:
+                    if r.overlaps(w):
+                        hit = (w, r)
+                        break
+                if hit:
+                    break
+            if hit is None or _ordered_before(events, i, j):
+                continue
+            w, r = hit
+            out.append(Finding(
+                rule="R2", severity=ERROR, events=(ei.seq, ej.seq),
+                sites=(ei.site(), ej.site()), waived=_waiver_of(ei, ej),
+                message=(f"{ej.site()} reads {r} at kernel(s) "
+                         f"{list(common)} while {ei.site()}'s write to {w} "
+                         "is still in flight (no wait_replies on token "
+                         f"{ei.token!r}, no barrier): the get may return "
+                         "pre- or post-write data")))
+    return out
+
+
+# --------------------------------------------------------------------------
+# R3: credit flow (underflow / leak / double-spend)
+# --------------------------------------------------------------------------
+
+def check_r3(events) -> list[Finding]:
+    out: list[Finding] = []
+    balance: dict[int, int] = {}
+    known: dict[int, bool] = {}
+    contributors: dict[int, list[CommEvent]] = {}
+    mailboxes: dict[int, set[int]] = {}
+    all_unknown = False
+
+    def bump(token, n, ev):
+        if token is None:
+            return
+        balance[token] = balance.get(token, 0) + n
+        contributors.setdefault(token, []).append(ev)
+
+    for ev in events:
+        if ev.op == "wait_replies":
+            if ev.token is None:
+                all_unknown = True      # traced token: drains *some* token
+                continue
+            t = ev.token
+            if ev.wait_n is None:
+                known[t] = False
+                contributors.pop(t, None)
+                mailboxes.pop(t, None)
+                continue
+            if not all_unknown and known.get(t, True) \
+                    and ev.wait_n > balance.get(t, 0):
+                issued = balance.get(t, 0)
+                out.append(Finding(
+                    rule="R3", severity=ERROR, events=(ev.seq,),
+                    sites=(ev.site(),), waived=ev.waiver,
+                    message=(f"{ev.site()} waits for {ev.wait_n} replies "
+                             f"on token {t} but the schedule issues only "
+                             f"{issued} acked credit(s) — this is the "
+                             "trace-time form of ERR_WAIT_UNDERFLOW (a "
+                             "hang in the threaded original)")))
+            balance[t] = balance.get(t, 0) - ev.wait_n
+            contributors.pop(t, None)
+            mailboxes.pop(t, None)
+            continue
+        if ev.token is None and (ev.acked or ev.credit_grants):
+            all_unknown = True
+            continue
+        if ev.acked and not ev.deferred_reply:
+            bump(ev.token, 1, ev)
+        for t, n in ev.credit_grants:
+            bump(t, n, ev)
+            contributors.setdefault(t, [])
+        if ev.mailbox_id is not None and ev.acked and ev.token is not None:
+            seen = mailboxes.setdefault(ev.token, set())
+            seen.add(ev.mailbox_id)
+            if len(seen) > 1:
+                out.append(Finding(
+                    rule="R3", severity=WARNING, events=(ev.seq,),
+                    sites=(ev.site(),), waived=ev.waiver,
+                    message=(f"token {ev.token} collects flush acks from "
+                             f"{len(seen)} distinct mailboxes with no "
+                             "wait_replies between flushes — a "
+                             "double-spend hazard: wait counts can no "
+                             "longer be attributed per mailbox")))
+    if not all_unknown:
+        for t, bal in sorted(balance.items()):
+            if bal > 0 and known.get(t, True):
+                evs = contributors.get(t, [])
+                out.append(Finding(
+                    rule="R3", severity=WARNING,
+                    events=tuple(e.seq for e in evs),
+                    sites=tuple(e.site() for e in evs),
+                    waived=_waiver_of(*evs) if evs else None,
+                    message=(f"{bal} credit(s) on token {t} are never "
+                             "consumed by a wait_replies — leaked acks "
+                             "(flush/put without credit consumption) "
+                             "accumulate across phases and corrupt later "
+                             "wait counts")))
+    return out
+
+
+# --------------------------------------------------------------------------
+# R4: out-of-bounds and vectored aliasing
+# --------------------------------------------------------------------------
+
+def _oob(iv: Interval, segment_words: int) -> bool:
+    return iv.known and (iv.start < 0 or iv.start + iv.words > segment_words)
+
+
+def check_r4(events) -> list[Finding]:
+    out: list[Finding] = []
+    for ev in events:
+        if not ev.segment_words:
+            continue
+        for kind, ivs in (("write", ev.writes), ("read", ev.reads)):
+            for iv in ivs:
+                if _oob(iv, ev.segment_words):
+                    out.append(Finding(
+                        rule="R4", severity=ERROR, events=(ev.seq,),
+                        sites=(ev.site(),), waived=ev.waiver,
+                        message=(f"{ev.site()} {kind}s {iv} outside the "
+                                 f"{ev.segment_words}-word segment: the "
+                                 "GAScore clips out-of-range addresses "
+                                 "silently, so part of the message is "
+                                 "dropped (or lands at the clip boundary)")))
+        if ev.op == "put_long_vectored" and ev.self_overlap:
+            alias = ev.detail.get("alias", "duplicate/overlapping addresses")
+            out.append(Finding(
+                rule="R4", severity=ERROR, events=(ev.seq,),
+                sites=(ev.site(),), waived=ev.waiver,
+                message=(f"vectored put {ev.site()} has aliasing "
+                         f"destination blocks in one packet ({alias}): "
+                         "the receiver's scatter makes the result depend "
+                         "on block order")))
+    return out
+
+
+def analyze(events) -> list[Finding]:
+    """Run all pass-1 rules over a recorded schedule."""
+    findings: list[Finding] = []
+    findings.extend(check_r1(events))
+    findings.extend(check_r2(events))
+    findings.extend(check_r3(events))
+    findings.extend(check_r4(events))
+    return findings

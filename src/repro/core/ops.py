@@ -34,12 +34,24 @@ from __future__ import annotations
 import jax.numpy as jnp
 from jax import lax
 
+from repro.analysis import trace as _lint
 from repro.core import am
 from repro.core import gascore as gc
 from repro.core import handlers as hd
 from repro.core.state import ERR_WAIT_UNDERFLOW, PgasState, ShoalContext
 
 Pattern = list[tuple[int, int]]
+
+
+class VectoredAliasError(ValueError):
+    """A vectored put's destination address list aliases itself.
+
+    Two blocks of ONE packet land on overlapping (or duplicate) segment
+    intervals, so the result depends on the receiver's scatter order —
+    the intra-packet form of the R1 race.  Deliberately order-dependent
+    packets must be wrapped in ``repro.analysis.waiver(reason)``, which
+    downgrades this to a waived R4 lint finding.
+    """
 
 
 # --------------------------------------------------------------------------
@@ -173,16 +185,26 @@ def put_short(ctx: ShoalContext, state: PgasState, pattern: Pattern, *,
     The handler runs on the destination's credit word ``token`` with
     ``arg``; the default (H_ADD, 1) is a counting semaphore.
     """
-    t = am.make_type(am.SHORT, asynchronous=asynchronous)
-    hdr = am.encode(type=t, src=ctx.my_id(), dst=_dst_of(ctx, pattern),
-                    handler=handler, token=token, dst_addr=arg)
-    hdr = _mask_nonparticipants(ctx, pattern, hdr)
-    hdr_r, _ = _exchange(ctx, pattern, hdr, None)
-    h = am.decode(hdr_r)
-    state = gc.ingress_short(ctx, state, h)
-    return _deliver_reply(ctx, state, pattern, h,
-                          asynchronous=asynchronous, token=token,
-                          reply_via=reply_via)
+    h_s, a_s, t_s = (_lint.static_int(handler), _lint.static_int(arg),
+                     _lint.static_int(token))
+    grants = ((t_s, a_s),) if (h_s == hd.H_ADD and a_s is not None
+                               and t_s is not None) else ()
+    tag = _lint.emit(
+        "put_short", pattern, token=t_s,
+        acked=ctx.transport.acked and not asynchronous,
+        asynchronous=asynchronous, deferred_reply=reply_via is not None,
+        credit_grants=grants, handler=h_s, segment_words=ctx.segment_words)
+    with _lint.scope(tag):
+        t = am.make_type(am.SHORT, asynchronous=asynchronous)
+        hdr = am.encode(type=t, src=ctx.my_id(), dst=_dst_of(ctx, pattern),
+                        handler=handler, token=token, dst_addr=arg)
+        hdr = _mask_nonparticipants(ctx, pattern, hdr)
+        hdr_r, _ = _exchange(ctx, pattern, hdr, None)
+        h = am.decode(hdr_r)
+        state = gc.ingress_short(ctx, state, h)
+        return _deliver_reply(ctx, state, pattern, h,
+                              asynchronous=asynchronous, token=token,
+                              reply_via=reply_via)
 
 
 # --------------------------------------------------------------------------
@@ -206,27 +228,35 @@ def put_medium(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray | None,
     """
     nwords = _resolve_nwords(payload, from_segment_addr, nwords, "put_medium")
     fifo = from_segment_addr is None
-    segs = _segments(nwords, ctx.transport.max_packet_words)
-    nseg, W = len(segs), segs[0][1]
-    offs = jnp.asarray([o for o, _ in segs], jnp.int32)
-    ws = jnp.asarray([w for _, w in segs], jnp.int32)
-    hdrs = am.encode_batch(
-        nseg,
-        type=_seg_types(am.MEDIUM, nseg, asynchronous=asynchronous, fifo=fifo),
-        src=ctx.my_id(), dst=_dst_of(ctx, pattern), nwords=ws,
-        handler=handler, token=token,
-        src_addr=0 if fifo else from_segment_addr + offs, seq=offs)
-    hdrs = _mask_nonparticipants(ctx, pattern, hdrs)
-    buf = gc.egress_batch(ctx, state, hdrs, payload if fifo else None, W)
-    state = gc.dataclasses_replace(
-        state, tx_words=state.tx_words +
-        jnp.where(_is_sender(ctx, pattern), nwords, 0))
-    hdr_r, pay_r = _exchange(ctx, pattern, hdrs, buf)
-    state, delivered = gc.ingress_medium_batch(state, hdr_r, pay_r, W)
-    state = _deliver_reply(ctx, state, pattern, am.decode(hdr_r[-1]),
-                           asynchronous=asynchronous, token=token,
-                           reply_via=reply_via)
-    return state, delivered[:nwords]
+    tag = _lint.emit(
+        "put_medium", pattern, token=_lint.static_int(token),
+        acked=ctx.transport.acked and not asynchronous,
+        asynchronous=asynchronous, deferred_reply=reply_via is not None,
+        handler=_lint.static_int(handler), segment_words=ctx.segment_words,
+        detail={"nwords": nwords})
+    with _lint.scope(tag):
+        segs = _segments(nwords, ctx.transport.max_packet_words)
+        nseg, W = len(segs), segs[0][1]
+        offs = jnp.asarray([o for o, _ in segs], jnp.int32)
+        ws = jnp.asarray([w for _, w in segs], jnp.int32)
+        hdrs = am.encode_batch(
+            nseg,
+            type=_seg_types(am.MEDIUM, nseg, asynchronous=asynchronous,
+                            fifo=fifo),
+            src=ctx.my_id(), dst=_dst_of(ctx, pattern), nwords=ws,
+            handler=handler, token=token,
+            src_addr=0 if fifo else from_segment_addr + offs, seq=offs)
+        hdrs = _mask_nonparticipants(ctx, pattern, hdrs)
+        buf = gc.egress_batch(ctx, state, hdrs, payload if fifo else None, W)
+        state = gc.dataclasses_replace(
+            state, tx_words=state.tx_words +
+            jnp.where(_is_sender(ctx, pattern), nwords, 0))
+        hdr_r, pay_r = _exchange(ctx, pattern, hdrs, buf)
+        state, delivered = gc.ingress_medium_batch(state, hdr_r, pay_r, W)
+        state = _deliver_reply(ctx, state, pattern, am.decode(hdr_r[-1]),
+                               asynchronous=asynchronous, token=token,
+                               reply_via=reply_via)
+        return state, delivered[:nwords]
 
 
 # --------------------------------------------------------------------------
@@ -248,27 +278,36 @@ def put_long(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray | None,
     """
     nwords = _resolve_nwords(payload, from_segment_addr, nwords, "put_long")
     fifo = from_segment_addr is None
-    segs = _segments(nwords, ctx.transport.max_packet_words)
-    nseg, W = len(segs), segs[0][1]
-    offs = jnp.asarray([o for o, _ in segs], jnp.int32)
-    ws = jnp.asarray([w for _, w in segs], jnp.int32)
-    hdrs = am.encode_batch(
-        nseg,
-        type=_seg_types(am.LONG, nseg, asynchronous=asynchronous, fifo=fifo),
-        src=ctx.my_id(), dst=_dst_of(ctx, pattern), nwords=ws,
-        dst_addr=dst_addr + offs,
-        src_addr=0 if fifo else from_segment_addr + offs,
-        handler=handler, token=token, seq=offs)
-    hdrs = _mask_nonparticipants(ctx, pattern, hdrs)
-    buf = gc.egress_batch(ctx, state, hdrs, payload if fifo else None, W)
-    state = gc.dataclasses_replace(
-        state, tx_words=state.tx_words +
-        jnp.where(_is_sender(ctx, pattern), nwords, 0))
-    hdr_r, pay_r = _exchange(ctx, pattern, hdrs, buf)
-    state = gc.ingress_long_batch(ctx, state, hdr_r, pay_r, W)
-    return _deliver_reply(ctx, state, pattern, am.decode(hdr_r[-1]),
-                          asynchronous=asynchronous, token=token,
-                          reply_via=reply_via)
+    tag = _lint.emit(
+        "put_long", pattern,
+        writes=(_lint.Interval(_lint.static_int(dst_addr), nwords),),
+        token=_lint.static_int(token),
+        acked=ctx.transport.acked and not asynchronous,
+        asynchronous=asynchronous, deferred_reply=reply_via is not None,
+        handler=_lint.static_int(handler), segment_words=ctx.segment_words)
+    with _lint.scope(tag):
+        segs = _segments(nwords, ctx.transport.max_packet_words)
+        nseg, W = len(segs), segs[0][1]
+        offs = jnp.asarray([o for o, _ in segs], jnp.int32)
+        ws = jnp.asarray([w for _, w in segs], jnp.int32)
+        hdrs = am.encode_batch(
+            nseg,
+            type=_seg_types(am.LONG, nseg, asynchronous=asynchronous,
+                            fifo=fifo),
+            src=ctx.my_id(), dst=_dst_of(ctx, pattern), nwords=ws,
+            dst_addr=dst_addr + offs,
+            src_addr=0 if fifo else from_segment_addr + offs,
+            handler=handler, token=token, seq=offs)
+        hdrs = _mask_nonparticipants(ctx, pattern, hdrs)
+        buf = gc.egress_batch(ctx, state, hdrs, payload if fifo else None, W)
+        state = gc.dataclasses_replace(
+            state, tx_words=state.tx_words +
+            jnp.where(_is_sender(ctx, pattern), nwords, 0))
+        hdr_r, pay_r = _exchange(ctx, pattern, hdrs, buf)
+        state = gc.ingress_long_batch(ctx, state, hdr_r, pay_r, W)
+        return _deliver_reply(ctx, state, pattern, am.decode(hdr_r[-1]),
+                              asynchronous=asynchronous, token=token,
+                              reply_via=reply_via)
 
 
 def _strides_may_overlap(stride, blk_words: int, nblocks: int) -> bool:
@@ -306,31 +345,50 @@ def put_long_strided(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray,
     ordered = (_strides_may_overlap(stride, blk_words, nblocks)
                if overlap is None else bool(overlap))
     nwords = blk_words * nblocks
-    # blocks per packet; >MTU plans segment at block granularity
-    per = max(1, ctx.transport.max_packet_words // blk_words)
-    nseg = -(-nblocks // per)
-    nb = jnp.minimum(per, nblocks - per * jnp.arange(nseg)).astype(jnp.int32)
-    W = min(per, nblocks) * blk_words
-    offs = jnp.arange(nseg, dtype=jnp.int32) * (per * blk_words)
-    hdrs = am.encode_batch(
-        nseg,
-        type=_seg_types(am.LONG, nseg, asynchronous=asynchronous,
-                        fifo=True, strided=True),
-        src=ctx.my_id(), dst=_dst_of(ctx, pattern), nwords=nb * blk_words,
-        dst_addr=dst_addr + jnp.arange(nseg) * per * stride,
-        handler=handler, token=token, stride=stride, blk_words=blk_words,
-        nblocks=nb, seq=offs)
-    hdrs = _mask_nonparticipants(ctx, pattern, hdrs)
-    buf = gc.egress_batch(ctx, state, hdrs, payload, W)
-    state = gc.dataclasses_replace(
-        state, tx_words=state.tx_words +
-        jnp.where(_is_sender(ctx, pattern), nwords, 0))
-    hdr_r, pay_r = _exchange(ctx, pattern, hdrs, buf)
-    state = gc.ingress_strided_batch(ctx, state, hdr_r, pay_r, blk_words,
-                                     min(per, nblocks), ordered)
-    return _deliver_reply(ctx, state, pattern, am.decode(hdr_r[-1]),
-                          asynchronous=asynchronous, token=token,
-                          reply_via=reply_via)
+    base_s, stride_s = _lint.static_int(dst_addr), _lint.static_int(stride)
+    if base_s is not None and stride_s is not None:
+        w_ivs = tuple(_lint.Interval(base_s + i * stride_s, blk_words)
+                      for i in range(nblocks))
+    else:
+        w_ivs = (_lint.Interval(None, nwords),)
+    may_alias = _strides_may_overlap(stride, blk_words, nblocks)
+    tag = _lint.emit(
+        "put_long_strided", pattern, writes=w_ivs,
+        token=_lint.static_int(token),
+        acked=ctx.transport.acked and not asynchronous,
+        asynchronous=asynchronous, deferred_reply=reply_via is not None,
+        handler=_lint.static_int(handler), segment_words=ctx.segment_words,
+        ordered_ingress=ordered, self_overlap=may_alias and not ordered,
+        detail={"stride": stride_s, "blk_words": blk_words,
+                "nblocks": nblocks})
+    with _lint.scope(tag):
+        # blocks per packet; >MTU plans segment at block granularity
+        per = max(1, ctx.transport.max_packet_words // blk_words)
+        nseg = -(-nblocks // per)
+        nb = jnp.minimum(per,
+                         nblocks - per * jnp.arange(nseg)).astype(jnp.int32)
+        W = min(per, nblocks) * blk_words
+        offs = jnp.arange(nseg, dtype=jnp.int32) * (per * blk_words)
+        hdrs = am.encode_batch(
+            nseg,
+            type=_seg_types(am.LONG, nseg, asynchronous=asynchronous,
+                            fifo=True, strided=True),
+            src=ctx.my_id(), dst=_dst_of(ctx, pattern),
+            nwords=nb * blk_words,
+            dst_addr=dst_addr + jnp.arange(nseg) * per * stride,
+            handler=handler, token=token, stride=stride,
+            blk_words=blk_words, nblocks=nb, seq=offs)
+        hdrs = _mask_nonparticipants(ctx, pattern, hdrs)
+        buf = gc.egress_batch(ctx, state, hdrs, payload, W)
+        state = gc.dataclasses_replace(
+            state, tx_words=state.tx_words +
+            jnp.where(_is_sender(ctx, pattern), nwords, 0))
+        hdr_r, pay_r = _exchange(ctx, pattern, hdrs, buf)
+        state = gc.ingress_strided_batch(ctx, state, hdr_r, pay_r, blk_words,
+                                         min(per, nblocks), ordered)
+        return _deliver_reply(ctx, state, pattern, am.decode(hdr_r[-1]),
+                              asynchronous=asynchronous, token=token,
+                              reply_via=reply_via)
 
 
 def put_long_vectored(ctx: ShoalContext, state: PgasState,
@@ -359,33 +417,60 @@ def put_long_vectored(ctx: ShoalContext, state: PgasState,
             f"in-packet addresses exceed the transport MTU "
             f"({ctx.transport.max_packet_words} words); vectored puts do "
             "not segment — split the block list across messages")
-    payload = jnp.concatenate([b.reshape(-1) for b in blocks])
-    t = am.make_type(am.LONG, asynchronous=asynchronous, fifo=True, vectored=True)
-    hdr = am.encode(type=t, src=ctx.my_id(), dst=_dst_of(ctx, pattern),
-                    nwords=nwords, handler=handler, token=token,
-                    nblocks=len(blocks))
-    hdr = _mask_nonparticipants(ctx, pattern, hdr)
-    buf = gc.egress(ctx, state, am.decode(hdr), payload, nwords)
-    state = gc.dataclasses_replace(
-        state, tx_words=state.tx_words +
-        jnp.where(_is_sender(ctx, pattern), nwords, 0))
-    addrs = jnp.asarray(dst_addrs, jnp.int32)
-    hdr_r, addrs_r, pay_r = _exchange(ctx, pattern, hdr, buf, extra=addrs)
-    h = am.decode(hdr_r)
-    off = 0
-    for i, b in enumerate(blocks):
-        w = int(b.size)
-        sub_hdr = am.Header(
-            type=h.type, src=h.src, dst=h.dst, nwords=jnp.asarray(w, jnp.int32),
-            dst_addr=addrs_r[i], src_addr=h.src_addr, handler=h.handler,
-            token=h.token, stride=h.stride, blk_words=h.blk_words,
-            nblocks=h.nblocks, seq=h.seq)
-        state = gc.ingress_long(ctx, state, sub_hdr,
-                                lax.dynamic_slice(pay_r, (off,), (w,)), w)
-        off += w
-    return _deliver_reply(ctx, state, pattern, h,
-                          asynchronous=asynchronous, token=token,
-                          reply_via=reply_via)
+    sizes = [int(b.size) for b in blocks]
+    ivs = _lint.intervals_for_blocks(list(dst_addrs), sizes)
+    alias = next(((i, j) for i in range(len(ivs))
+                  for j in range(i + 1, len(ivs))
+                  if ivs[i].known and ivs[j].known
+                  and ivs[i].overlaps(ivs[j])), None)
+    if alias is not None and _lint.current_waiver() is None:
+        i, j = alias
+        raise VectoredAliasError(
+            f"put_long_vectored: destination blocks {i} ({ivs[i]}) and "
+            f"{j} ({ivs[j]}) overlap inside one packet, so the landed "
+            "value depends on the receiver's scatter order (duplicate "
+            "addresses are the degenerate case). Give each block a "
+            "disjoint interval, or wrap the call in "
+            "repro.analysis.waiver(reason) if the overlap is deliberate.")
+    tag = _lint.emit(
+        "put_long_vectored", pattern, writes=ivs,
+        token=_lint.static_int(token),
+        acked=ctx.transport.acked and not asynchronous,
+        asynchronous=asynchronous, deferred_reply=reply_via is not None,
+        handler=_lint.static_int(handler), segment_words=ctx.segment_words,
+        self_overlap=alias is not None,
+        detail={} if alias is None else
+        {"alias": f"blocks {alias[0]} and {alias[1]} overlap"})
+    with _lint.scope(tag):
+        payload = jnp.concatenate([b.reshape(-1) for b in blocks])
+        t = am.make_type(am.LONG, asynchronous=asynchronous, fifo=True,
+                         vectored=True)
+        hdr = am.encode(type=t, src=ctx.my_id(), dst=_dst_of(ctx, pattern),
+                        nwords=nwords, handler=handler, token=token,
+                        nblocks=len(blocks))
+        hdr = _mask_nonparticipants(ctx, pattern, hdr)
+        buf = gc.egress(ctx, state, am.decode(hdr), payload, nwords)
+        state = gc.dataclasses_replace(
+            state, tx_words=state.tx_words +
+            jnp.where(_is_sender(ctx, pattern), nwords, 0))
+        addrs = jnp.asarray(dst_addrs, jnp.int32)
+        hdr_r, addrs_r, pay_r = _exchange(ctx, pattern, hdr, buf, extra=addrs)
+        h = am.decode(hdr_r)
+        off = 0
+        for i, b in enumerate(blocks):
+            w = int(b.size)
+            sub_hdr = am.Header(
+                type=h.type, src=h.src, dst=h.dst,
+                nwords=jnp.asarray(w, jnp.int32),
+                dst_addr=addrs_r[i], src_addr=h.src_addr, handler=h.handler,
+                token=h.token, stride=h.stride, blk_words=h.blk_words,
+                nblocks=h.nblocks, seq=h.seq)
+            state = gc.ingress_long(ctx, state, sub_hdr,
+                                    lax.dynamic_slice(pay_r, (off,), (w,)), w)
+            off += w
+        return _deliver_reply(ctx, state, pattern, h,
+                              asynchronous=asynchronous, token=token,
+                              reply_via=reply_via)
 
 
 # --------------------------------------------------------------------------
@@ -400,22 +485,28 @@ def get_medium(ctx: ShoalContext, state: PgasState, pattern: Pattern,
     bump ONCE per message, on the final segment).  >MTU gets batch all
     request headers into one collective and the whole response into a
     second: 2 link traversals regardless of segment count."""
-    segs = _segments(nwords, ctx.transport.max_packet_words)
-    nseg, W = len(segs), segs[0][1]
-    offs = jnp.asarray([o for o, _ in segs], jnp.int32)
-    ws = jnp.asarray([w for _, w in segs], jnp.int32)
-    hdrs = am.encode_batch(
-        nseg, type=am.make_type(am.MEDIUM, get=True),
-        src=ctx.my_id(), dst=_dst_of(ctx, pattern), nwords=ws,
-        src_addr=src_addr + offs, token=token, seq=offs)
-    hdrs = _mask_nonparticipants(ctx, pattern, hdrs)
-    hdr_r, _ = _exchange(ctx, pattern, hdrs, None)
-    state, resp_rows, data_rows = gc.serve_get_batch(ctx, state, hdr_r, W)
-    back_hdr, back_data = _exchange(ctx, _reverse(pattern), resp_rows,
-                                    data_rows)
-    state = gc.ingress_reply(state, am.decode(back_hdr[-1]))
-    state, data = gc.ingress_medium_batch(state, back_hdr, back_data, W)
-    return state, data[:nwords]
+    tag = _lint.emit(
+        "get_medium", pattern,
+        reads=(_lint.Interval(_lint.static_int(src_addr), int(nwords)),),
+        token=_lint.static_int(token), acked=True,
+        segment_words=ctx.segment_words)
+    with _lint.scope(tag):
+        segs = _segments(nwords, ctx.transport.max_packet_words)
+        nseg, W = len(segs), segs[0][1]
+        offs = jnp.asarray([o for o, _ in segs], jnp.int32)
+        ws = jnp.asarray([w for _, w in segs], jnp.int32)
+        hdrs = am.encode_batch(
+            nseg, type=am.make_type(am.MEDIUM, get=True),
+            src=ctx.my_id(), dst=_dst_of(ctx, pattern), nwords=ws,
+            src_addr=src_addr + offs, token=token, seq=offs)
+        hdrs = _mask_nonparticipants(ctx, pattern, hdrs)
+        hdr_r, _ = _exchange(ctx, pattern, hdrs, None)
+        state, resp_rows, data_rows = gc.serve_get_batch(ctx, state, hdr_r, W)
+        back_hdr, back_data = _exchange(ctx, _reverse(pattern), resp_rows,
+                                        data_rows)
+        state = gc.ingress_reply(state, am.decode(back_hdr[-1]))
+        state, data = gc.ingress_medium_batch(state, back_hdr, back_data, W)
+        return state, data[:nwords]
 
 
 def get_long(ctx: ShoalContext, state: PgasState, pattern: Pattern,
@@ -424,26 +515,33 @@ def get_long(ctx: ShoalContext, state: PgasState, pattern: Pattern,
     """Long get: fetch remote segment words into the *local* segment at
     ``dst_addr`` (one-sided read).  Same batched 2-traversal wire plan
     as :func:`get_medium`; one credit per message."""
-    segs = _segments(nwords, ctx.transport.max_packet_words)
-    nseg, W = len(segs), segs[0][1]
-    offs = jnp.asarray([o for o, _ in segs], jnp.int32)
-    ws = jnp.asarray([w for _, w in segs], jnp.int32)
-    hdrs = am.encode_batch(
-        nseg, type=am.make_type(am.LONG, get=True),
-        src=ctx.my_id(), dst=_dst_of(ctx, pattern), nwords=ws,
-        src_addr=src_addr + offs, dst_addr=dst_addr + offs,
-        token=token, handler=handler, seq=offs)
-    hdrs = _mask_nonparticipants(ctx, pattern, hdrs)
-    hdr_r, _ = _exchange(ctx, pattern, hdrs, None)
-    state, resp_rows, data_rows = gc.serve_get_batch(ctx, state, hdr_r, W)
-    back_hdr, back_data = _exchange(ctx, _reverse(pattern), resp_rows,
-                                    data_rows)
-    state = gc.ingress_reply(state, am.decode(back_hdr[-1]))
-    # land in local segment through the handler (class LONG on the wire)
-    is_rep = (back_hdr[:, 0] & am.FLAG_REPLY) != 0
-    land_rows = back_hdr.at[:, 0].set(
-        jnp.where(is_rep, am.LONG, am.NOP).astype(jnp.int32))
-    return gc.ingress_long_batch(ctx, state, land_rows, back_data, W)
+    tag = _lint.emit(
+        "get_long", pattern,
+        reads=(_lint.Interval(_lint.static_int(src_addr), int(nwords)),),
+        token=_lint.static_int(token), acked=True,
+        handler=_lint.static_int(handler), segment_words=ctx.segment_words,
+        detail={"local_dst_addr": _lint.static_int(dst_addr)})
+    with _lint.scope(tag):
+        segs = _segments(nwords, ctx.transport.max_packet_words)
+        nseg, W = len(segs), segs[0][1]
+        offs = jnp.asarray([o for o, _ in segs], jnp.int32)
+        ws = jnp.asarray([w for _, w in segs], jnp.int32)
+        hdrs = am.encode_batch(
+            nseg, type=am.make_type(am.LONG, get=True),
+            src=ctx.my_id(), dst=_dst_of(ctx, pattern), nwords=ws,
+            src_addr=src_addr + offs, dst_addr=dst_addr + offs,
+            token=token, handler=handler, seq=offs)
+        hdrs = _mask_nonparticipants(ctx, pattern, hdrs)
+        hdr_r, _ = _exchange(ctx, pattern, hdrs, None)
+        state, resp_rows, data_rows = gc.serve_get_batch(ctx, state, hdr_r, W)
+        back_hdr, back_data = _exchange(ctx, _reverse(pattern), resp_rows,
+                                        data_rows)
+        state = gc.ingress_reply(state, am.decode(back_hdr[-1]))
+        # land in local segment through the handler (class LONG on the wire)
+        is_rep = (back_hdr[:, 0] & am.FLAG_REPLY) != 0
+        land_rows = back_hdr.at[:, 0].set(
+            jnp.where(is_rep, am.LONG, am.NOP).astype(jnp.int32))
+        return gc.ingress_long_batch(ctx, state, land_rows, back_data, W)
 
 
 # --------------------------------------------------------------------------
@@ -455,9 +553,11 @@ def barrier(ctx: ShoalContext, state: PgasState) -> PgasState:
     synchronization").  A psum of a unit scalar is the dataflow barrier:
     no kernel's successor ops can be scheduled before every kernel's
     contribution arrives.  The barrier epoch counts completions."""
-    arrived = lax.psum(jnp.ones((), jnp.int32), ctx.axes)
-    epoch = state.barrier_epoch + (arrived // arrived)  # +1, data-dependent
-    return gc.dataclasses_replace(state, barrier_epoch=epoch)
+    tag = _lint.emit("barrier", [])
+    with _lint.scope(tag):
+        arrived = lax.psum(jnp.ones((), jnp.int32), ctx.axes)
+        epoch = state.barrier_epoch + (arrived // arrived)  # data-dependent
+        return gc.dataclasses_replace(state, barrier_epoch=epoch)
 
 
 def wait_replies(ctx: ShoalContext, state: PgasState, token, n) -> PgasState:
@@ -468,11 +568,16 @@ def wait_replies(ctx: ShoalContext, state: PgasState, token, n) -> PgasState:
     data dependence, so this is bookkeeping: it drains ``n`` credits and
     raises a sticky error bit if fewer than ``n`` were present — the
     observable equivalent of a hang in the threaded original (tests
-    assert on it).
+    assert on it).  On the host, :func:`repro.core.state.raise_on_error`
+    converts the bit into a named :class:`~repro.core.state.
+    WaitUnderflowError` carrying the offending token id(s).
     """
-    token = jnp.clip(jnp.asarray(token, jnp.int32), 0, hd.NUM_TOKENS - 1)
-    have = state.credits[token]
-    err = jnp.where(have < n, ERR_WAIT_UNDERFLOW, 0).astype(jnp.int32)
-    credits = hd.drain_credits(state.credits, token, n)
-    return gc.dataclasses_replace(state, credits=credits,
-                                  error=state.error | err)
+    tag = _lint.emit("wait_replies", [], token=_lint.static_int(token),
+                     wait_n=_lint.static_int(n))
+    with _lint.scope(tag):
+        token = jnp.clip(jnp.asarray(token, jnp.int32), 0, hd.NUM_TOKENS - 1)
+        have = state.credits[token]
+        err = jnp.where(have < n, ERR_WAIT_UNDERFLOW, 0).astype(jnp.int32)
+        credits = hd.drain_credits(state.credits, token, n)
+        return gc.dataclasses_replace(state, credits=credits,
+                                      error=state.error | err)

@@ -56,6 +56,52 @@ class PgasState:
 ERR_WAIT_UNDERFLOW = 1  # wait_replies saw fewer credits than expected
 
 
+class WaitUnderflowError(RuntimeError):
+    """A ``wait_replies`` drained more credits than the schedule issued.
+
+    The device-side error word is sticky (kernels cannot raise), so this
+    is the host-side debug surface: :func:`raise_on_error` decodes the
+    error bits *and* names the offending token(s) — a drained wait
+    leaves its token's credit counter negative, which is exactly the
+    trace-time R3 underflow condition shoal-lint reports statically.
+    """
+
+    def __init__(self, tokens, kernels, where: str = ""):
+        self.tokens = tuple(int(t) for t in tokens)
+        self.kernels = tuple(int(k) for k in kernels)
+        at = f" in {where}" if where else ""
+        tok = (f"token(s) {list(self.tokens)}" if self.tokens
+               else "an unidentified token (counters were rebalanced)")
+        ker = (f" on kernel(s) {list(self.kernels)}" if self.kernels
+               else "")
+        super().__init__(
+            f"ERR_WAIT_UNDERFLOW{at}: wait_replies consumed more credits "
+            f"than were issued on {tok}{ker} — the threaded original "
+            "would hang here; shoal-lint rule R3 catches this schedule "
+            "at trace time (scripts/comm_lint.py)")
+
+
+def raise_on_error(state: PgasState, *, where: str = "") -> PgasState:
+    """Host-side debug check: raise if any kernel latched an error bit.
+
+    Call on a state fetched back to the host (after ``spmd`` execution).
+    Accepts per-kernel ``(...,)`` or stacked global ``(kernels, ...)``
+    leaves; returns ``state`` unchanged when clean so it can sit inline
+    in a host-side pipeline.
+    """
+    import numpy as np
+
+    err = np.asarray(jax.device_get(state.error)).reshape(-1)
+    if not (err & ERR_WAIT_UNDERFLOW).any():
+        return state
+    kernels = np.nonzero(err & ERR_WAIT_UNDERFLOW)[0] if err.size > 1 else ()
+    credits = np.asarray(jax.device_get(state.credits))
+    credits = credits.reshape(-1, hd.NUM_TOKENS)
+    # an over-drained wait leaves its token negative on the waiting kernel
+    tokens = np.nonzero((credits < 0).any(axis=0))[0]
+    raise WaitUnderflowError(tokens, kernels, where=where)
+
+
 @dataclasses.dataclass(frozen=True)
 class ShoalContext:
     """Trace-time Shoal configuration.

@@ -47,6 +47,82 @@ def make(transport, segment_words):
     return ctx, GlobalAddressSpace(ctx)
 
 
+def sequential_schedule_oracle(schedule, segment_words):
+    """Numpy reference semantics for a put/wait/barrier schedule.
+
+    ``schedule`` rows are ``("put", start, words, value, token, acked)``,
+    ``("wait", token, n)``, or ``("barrier",)``.  Executes the writes in
+    program order, then independently derives what the analyzer should
+    report — this is jax-free and shares no code with
+    :mod:`repro.analysis.rules`, so the property test in
+    tests/test_comm_lint.py can cross-check race verdicts against it.
+
+    Returns a dict with:
+
+    * ``segment`` — final numpy segment in program order;
+    * ``unordered_overlaps`` — (i, j) put pairs whose arrival order the
+      transport may legally swap (no barrier, no wait on put i's ack
+      token between them) and whose intervals overlap;
+    * ``divergent`` — the subset of those pairs where delaying put i's
+      arrival until after put j actually changes final memory (a pair
+      can be non-divergent yet racy when a later put shadows it);
+    * ``underflow_events`` — schedule indices of waits that drain more
+      credits than were issued by then;
+    * ``leaked_tokens`` — tokens with credits left at the end.
+    """
+    n = len(schedule)
+
+    def run(order):
+        seg = np.zeros(segment_words, np.float64)
+        for idx in order:
+            ev = schedule[idx]
+            if ev[0] == "put":
+                _, start, words, value, _tok, _acked = ev
+                seg[start:start + words] = value
+        return seg
+
+    base = run(range(n))
+
+    credits: dict = {}
+    underflow_events = []
+    for idx, ev in enumerate(schedule):
+        if ev[0] == "put" and ev[5]:
+            credits[ev[4]] = credits.get(ev[4], 0) + 1
+        elif ev[0] == "wait":
+            _, tok, cnt = ev
+            if cnt > credits.get(tok, 0):
+                underflow_events.append(idx)
+            credits[tok] = credits.get(tok, 0) - cnt
+    leaked = sorted(t for t, c in credits.items() if c > 0)
+
+    unordered, divergent = [], []
+    for i in range(n):
+        if schedule[i][0] != "put":
+            continue
+        for j in range(i + 1, n):
+            between = schedule[i + 1:j]
+            if any(e[0] == "barrier" for e in between):
+                break            # i is ordered before everything later
+            if schedule[i][5] and any(
+                    e[0] == "wait" and e[1] == schedule[i][4]
+                    for e in between):
+                break            # i's ack was consumed: ordered
+            if schedule[j][0] != "put":
+                continue
+            si, wi = schedule[i][1], schedule[i][2]
+            sj, wj = schedule[j][1], schedule[j][2]
+            if not (si < sj + wj and sj < si + wi):
+                continue
+            unordered.append((i, j))
+            order = [k for k in range(n) if k != i]
+            order.insert(order.index(j) + 1, i)
+            if not np.array_equal(run(order), base):
+                divergent.append((i, j))
+    return {"segment": base, "unordered_overlaps": unordered,
+            "divergent": divergent, "underflow_events": underflow_events,
+            "leaked_tokens": leaked}
+
+
 def test_mailbox_mixed_stack_semantics():
     """Long writes + Long adds + Short signals in ONE flush, correct
     per-row dispatch, one credit per flush on the mailbox token."""

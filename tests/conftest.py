@@ -32,3 +32,14 @@ def run_subprocess_checks(script: str, n_devices: int = 8, timeout=900):
 @pytest.fixture(scope="session")
 def repo_root():
     return REPO
+
+
+@pytest.fixture(scope="session")
+def lint_clean():
+    """shoal-lint pytest surface: ``lint_clean(fn, *args)`` traces the
+    program, runs rules R1-R4, and raises CommLintError (an
+    AssertionError rendering every finding) unless it is clean."""
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.analysis.jaxpr_lint import lint_clean as _lint_clean
+
+    return _lint_clean

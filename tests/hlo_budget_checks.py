@@ -1,15 +1,16 @@
 """Collective-budget regression checks for the fused wire format.
 
 Run by tests/test_collective_budget.py in a subprocess with 8 host
-devices.  Compiles (never executes) the hot AM programs and counts
-``collective-permute`` ops in the optimized HLO via
-:mod:`repro.launch.hlo_analysis` — the wire cost is a *measured*
-property of the compiled program, not a belief:
+devices.  Compiles (never executes) the hot AM programs and diffs their
+collective counts against the checked-in ``comm_budgets.toml`` through
+:mod:`repro.analysis.hlo_budget` — the same pass-2 analyzer CI's
+``scripts/comm_lint.py`` runs, so a budget means one thing everywhere.
+The wire cost is a *measured* property of the compiled program, not a
+belief:
 
-* acked >MTU ``put_long`` (nseg = 4): must fit the ``nseg + 1`` budget
-  the fused format guarantees (and actually compiles to 2: one batched
-  packet stack + one coalesced reply, down from 3 * nseg = 12 in the
-  header/payload/reply-per-segment model);
+* acked >MTU ``put_long`` (nseg = 4): 2 collective-permutes (one
+  batched packet stack + one coalesced reply, down from 3 * nseg = 12
+  in the header/payload/reply-per-segment model);
 * async >MTU ``put_long``: 1;
 * >MTU ``get_medium``: 2 (batched request stack + batched response);
 * ``put_long_vectored``: 2 (addresses ride inside the fused packet);
@@ -22,10 +23,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import hlo_budget
 from repro.core import ops
 from repro.core.address_space import GlobalAddressSpace
 from repro.core.state import ShoalContext
-from repro.launch.hlo_analysis import parse_collectives
 from repro.runtime import TCP, UDP
 from repro.runtime.topology import make_cpu_mesh
 
@@ -35,18 +36,22 @@ TINY_TCP = dataclasses.replace(TCP, max_packet_bytes=64)   # 16 words
 TINY_UDP = dataclasses.replace(UDP, max_packet_bytes=64)
 NSEG = 4                                                   # 50 words / 16
 
+BUDGETS = hlo_budget.load_budgets()
 
-def cp_count(gas, prog, *extra):
+
+def measure(gas, prog, *extra):
     state0 = gas.make_global_state()
     hlo = jax.jit(gas.spmd(prog)).lower(state0, *extra).compile().as_text()
-    return parse_collectives(hlo).ops.get("collective-permute", 0.0)
+    return hlo_budget.measure(hlo)
 
 
-def check(name, got, budget, expect=None):
-    assert got <= budget, f"{name}: {got} collective-permutes > budget {budget}"
-    if expect is not None:
-        assert got == expect, f"{name}: {got} collective-permutes != {expect}"
-    print(f"[hlo-budget] {name}: {got:.0f} <= {budget} ok")
+def check(section, stats):
+    spec = BUDGETS.get(section)
+    assert spec, f"comm_budgets.toml is missing a [{section}] section"
+    findings = hlo_budget.check_budget(section, stats, spec)
+    assert not findings, "\n".join(f.render() for f in findings)
+    cps = stats.ops.get("collective-permute", 0.0)
+    print(f"[hlo-budget] {section}: {cps:.0f} collective-permutes ok")
 
 
 def main():
@@ -61,22 +66,21 @@ def main():
         st = ops.put_long(ctx, st, pay, RING, dst_addr=8, token=1)
         return ops.wait_replies(ctx, st, token=1, n=1)
 
-    check("put_long/acked/4seg", cp_count(gas, put_acked),
-          budget=NSEG + 1, expect=2)
+    check("micro.put_long_acked_4seg", measure(gas, put_acked))
 
     def get4(st):
         st, data = ops.get_medium(ctx, st, RING, src_addr=0, nwords=50,
                                   token=2)
         return ops.wait_replies(ctx, st, token=2, n=1)
 
-    check("get_medium/4seg", cp_count(gas, get4), budget=NSEG + 1, expect=2)
+    check("micro.get_medium_4seg", measure(gas, get4))
 
     def vectored(st):
         return ops.put_long_vectored(
             ctx, st, [jnp.ones(2, jnp.float32), jnp.ones(3, jnp.float32)],
             RING, dst_addrs=[40, 60], token=3)
 
-    check("put_long_vectored", cp_count(gas, vectored), budget=2, expect=2)
+    check("micro.put_long_vectored", measure(gas, vectored))
 
     ctx_u = ShoalContext(mesh=mesh, axes=("kernel",), transport=TINY_UDP,
                          segment_words=128)
@@ -87,8 +91,7 @@ def main():
         return ops.put_long(ctx_u, st, pay, RING, dst_addr=8, token=1,
                             asynchronous=True)
 
-    check("put_long/async/4seg", cp_count(gas_u, put_async),
-          budget=NSEG, expect=1)
+    check("micro.put_long_async_4seg", measure(gas_u, put_async))
 
     # one full Jacobi iteration with segmenting halo rows: n=64 grid on
     # 8 kernels, 16-word MTU -> each 64-word halo row is 4 packets; two
@@ -100,9 +103,7 @@ def main():
     st = gas_j.make_global_state()
     blocks = jnp.zeros((N, 64 // N, 64), jnp.float32)
     hlo = fn.lower(st, blocks).compile().as_text()
-    got = parse_collectives(hlo).ops.get("collective-permute", 0.0)
-    check("jacobi-iter/64x8/segmenting-halos", got,
-          budget=2 * (NSEG + 1), expect=4)
+    check("micro.jacobi_iter_segmenting", hlo_budget.measure(hlo))
 
     print("HLO_BUDGET_OK")
 

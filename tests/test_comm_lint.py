@@ -1,0 +1,107 @@
+"""shoal-lint: behavioural checks (subprocess) + property test.
+
+The subprocess half runs tests/comm_lint_checks.py on 8 host devices —
+rules R1-R4 against real op-layer programs, the PR 6 strided-race
+regression, registry cleanliness, and the host-side
+``WaitUnderflowError`` debug path.
+
+The property half fuzzes put/wait/barrier schedules and cross-checks
+the analyzer's verdicts against ``sequential_schedule_oracle`` in
+tests/actor_checks.py — an independent numpy executor that *runs* the
+schedule under every admissible arrival reorder:
+
+* R1 verdicts must equal the oracle's unordered-overlap pairs exactly;
+* an R1-clean schedule must be arrival-order independent (every
+  admissible reorder leaves final memory bit-identical);
+* R3 underflow/leak verdicts must match the oracle's credit counters.
+"""
+
+import random
+
+from _hypothesis_compat import given, settings, strategies
+from conftest import run_subprocess_checks
+
+
+def test_comm_lint_rules():
+    out = run_subprocess_checks("comm_lint_checks.py", n_devices=8,
+                                timeout=900)
+    assert "COMM_LINT_CHECKS_ALL_PASS" in out
+
+
+# --------------------------------------------------------------------------
+# property: analyzer race/credit verdicts vs the numpy sequential oracle
+# --------------------------------------------------------------------------
+
+SEG = 16
+
+
+def _random_schedule(rng: random.Random):
+    n_ops = rng.randint(2, 10)
+    sched, value = [], 1.0
+    for _ in range(n_ops):
+        r = rng.random()
+        if r < 0.6:
+            words = rng.randint(1, 5)
+            sched.append(("put", rng.randrange(0, SEG - words), words,
+                          value, rng.randint(0, 2), rng.random() < 0.7))
+            value += 1.0           # distinct values: overlap is observable
+        elif r < 0.85:
+            sched.append(("wait", rng.randint(0, 2), rng.randint(1, 2)))
+        else:
+            sched.append(("barrier",))
+    return sched
+
+
+def _to_events(sched):
+    from repro.analysis import CommEvent, Interval
+
+    events = []
+    for i, row in enumerate(sched):
+        if row[0] == "put":
+            _, start, words, _value, token, acked = row
+            events.append(CommEvent(
+                seq=i, op="put_long", pattern=((0, 1),),
+                writes=(Interval(start, words),), token=token, acked=acked,
+                segment_words=SEG))
+        elif row[0] == "wait":
+            events.append(CommEvent(seq=i, op="wait_replies", pattern=(),
+                                    token=row[1], wait_n=row[2]))
+        else:
+            events.append(CommEvent(seq=i, op="barrier", pattern=()))
+    return events
+
+
+@settings(max_examples=120, deadline=None)
+@given(seed=strategies.integers(min_value=0, max_value=2**20))
+def test_race_verdicts_match_sequential_oracle(seed):
+    from actor_checks import sequential_schedule_oracle
+    from repro.analysis import ERROR, WARNING, lint_events
+
+    sched = _random_schedule(random.Random(seed))
+    oracle = sequential_schedule_oracle(sched, SEG)
+    rep = lint_events(_to_events(sched), name=f"fuzz-{seed}")
+
+    r1_pairs = {f.events for f in rep.findings if f.rule == "R1"}
+    want = {(i, j) for i, j in oracle["unordered_overlaps"]}
+    assert r1_pairs == want, (
+        f"seed {seed}: R1 verdicts {sorted(r1_pairs)} != oracle "
+        f"unordered overlaps {sorted(want)}\nschedule: {sched}")
+
+    if not r1_pairs:
+        # clean verdict is a *semantic* guarantee: executing the schedule
+        # under any admissible arrival reorder gives identical memory
+        assert not oracle["divergent"], (
+            f"seed {seed}: analyzer clean but reorder changes memory: "
+            f"{oracle['divergent']}\nschedule: {sched}")
+
+    r3_under = {f.events[0] for f in rep.findings
+                if f.rule == "R3" and f.severity == ERROR}
+    assert r3_under == set(oracle["underflow_events"]), (
+        f"seed {seed}: R3 underflows {sorted(r3_under)} != oracle "
+        f"{oracle['underflow_events']}\nschedule: {sched}")
+
+    n_leaks = sum(1 for f in rep.findings
+                  if f.rule == "R3" and f.severity == WARNING)
+    assert n_leaks == len(oracle["leaked_tokens"]), (
+        f"seed {seed}: {n_leaks} R3 leak warnings != oracle leaked "
+        f"tokens {oracle['leaked_tokens']}\nschedule: {sched}")

@@ -21,6 +21,10 @@ the collective budget is a *measured* number, not a belief:
   row reports the aggregation ratio
 * one full Jacobi iteration at grid 4096 / 8 kernels (the paper's
   footnote-2 failing configuration: halo row 4096 words > 2250-word MTU)
+* the steady-state Jacobi loop with reply piggybacking: acks ride the
+  next iteration's reverse-link data packet, so each iteration costs 2
+  collectives instead of 4 — the row reports µs and collective-permutes
+  *per iteration* (loop-exit ledger drains divided out)
 
 CSV: ``name,us_per_call,collective_permutes``.
 
@@ -118,11 +122,27 @@ def main():
     print(f"mailbox/msgs-per-collective,{n_msgs / max(cps, 1):.1f},"
           f"{cps:.0f} collectives for {n_msgs} sends")
 
+    # steady-state Jacobi: halo puts defer their acks into the receiver
+    # ledger and the acks piggyback home on the NEXT iteration's
+    # reverse-link packet -> 2 CPs/iteration + 2 one-off loop-exit
+    # drains.  Derived column is CPs per iteration (drains divided out).
+    from repro.apps.jacobi import JacobiApp
+    steady_n, steady_iters = (64 if SMOKE else 4096), 4
+    app = JacobiApp(n=steady_n, kernels=N, iters=steady_iters)
+    fn = app.build()
+    gas_j = GlobalAddressSpace(app.ctx)
+    st = gas_j.make_global_state()
+    blocks = jnp.zeros((N, steady_n // N, steady_n), jnp.float32)
+    us = time_fn(fn, st, blocks, iters=3 if SMOKE else 5, warmup=1)
+    hlo = fn.lower(st, blocks).compile().as_text()
+    cps = parse_collectives(hlo).ops.get("collective-permute", 0.0)
+    print(f"comm/jacobi-steady/per-iter,{us / steady_iters:.1f},"
+          f"{(cps - 2) / steady_iters:.0f}")
+
     if SMOKE:
         return
 
     # one Jacobi iteration, grid 4096 x 8 kernels: halo rows segment 2x
-    from repro.apps.jacobi import JacobiApp
     app = JacobiApp(n=4096, kernels=N, iters=1)
     fn = app.build()
     gas_j = GlobalAddressSpace(app.ctx)

@@ -12,6 +12,10 @@ watermark or an explicit phase boundary.
 * :class:`~repro.actors.mailbox.Mailbox` — device-side mailbox: N tiny
   Short/Long AMs to one destination cost one ``ppermute`` (plus, on an
   acked transport, one coalesced reply for the whole flush).
+* :class:`~repro.actors.mailbox.MultiMailbox` — one mailbox over
+  several destination patterns: sub-stacks of patterns with disjoint
+  source/destination sets concatenate and flush as one collective per
+  group, with one counted reply per group acking every pattern.
 * :class:`~repro.actors.mailbox.ReplyMailbox` — defers the auto-replies
   of ordinary puts and returns all owed credits per destination as one
   Short AM.
@@ -24,10 +28,11 @@ watermark or an explicit phase boundary.
 
 from repro.actors.coalesce import pack_meta_lane, unpack_meta_lane
 from repro.actors.events import EventMailbox, SlotEvent
-from repro.actors.mailbox import Mailbox, ReplyMailbox
+from repro.actors.mailbox import Mailbox, MultiMailbox, ReplyMailbox
 
 __all__ = [
     "Mailbox",
+    "MultiMailbox",
     "ReplyMailbox",
     "EventMailbox",
     "SlotEvent",

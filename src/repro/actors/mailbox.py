@@ -237,6 +237,134 @@ class Mailbox:
         return state
 
 
+class MultiMailbox:
+    """One coalescing mailbox over SEVERAL destination patterns.
+
+    A plain :class:`Mailbox` is bound to one pattern, so an actor phase
+    spraying K neighbor links costs K flush collectives (plus K
+    replies).  A MultiMailbox keeps one pending sub-stack per pattern
+    and flushes them TOGETHER: patterns whose source and destination
+    sets are disjoint (:func:`repro.core.ops.group_disjoint_patterns`)
+    concatenate their stacks and cross the links as ONE ``ppermute``
+    per group — the :func:`repro.core.ops.put_long_multi` wire plan
+    applied to the actor layer — absorbed by the same mixed-class
+    scanned ingress.
+
+    Ack accounting on an acked transport: the last row of EACH
+    pattern's sub-stack is acked and each group adds ONE counted reply
+    collective returning every pattern's ack on the *mailbox* token —
+    one credit per pattern per flush, one reply collective per group.
+    ``wait_replies(token=mmb.token, n=<patterns flushed>)`` is the
+    phase-boundary fence.
+    """
+
+    def __init__(self, ctx: ShoalContext, patterns, *, msg_words: int,
+                 watermark: int = DEFAULT_WATERMARK, token: int = 0,
+                 dtype=jnp.float32):
+        self.patterns = [list(p) for p in patterns]
+        if not self.patterns:
+            raise ValueError("MultiMailbox needs at least one pattern")
+        self.ctx = ctx
+        self.token = int(token)
+        self.msg_words = int(msg_words)
+        self.watermark = int(watermark)
+        # sub-box watermarks are disabled: the MultiMailbox watermark
+        # governs the COMBINED pending count so flushes stay grouped
+        self._boxes = [Mailbox(ctx, p, msg_words=msg_words,
+                               watermark=1 << 30, token=token, dtype=dtype)
+                       for p in self.patterns]
+        self.groups = ops.group_disjoint_patterns(self.patterns)
+        self.flushes = 0
+
+    @property
+    def pending(self) -> int:
+        return sum(b.pending for b in self._boxes)
+
+    @property
+    def msgs_sent(self) -> int:
+        return sum(b.msgs_sent for b in self._boxes)
+
+    def send(self, state: PgasState, pattern_idx: int, payload=None,
+             **kw) -> PgasState:
+        """Append one tiny AM to pattern ``pattern_idx``'s sub-stack
+        (same per-message kwargs as :meth:`Mailbox.send`)."""
+        state = self._boxes[pattern_idx].send(state, payload, **kw)
+        if self.pending >= self.watermark:
+            state = self.flush(state)
+        return state
+
+    def flush(self, state: PgasState) -> PgasState:
+        """Ship every pattern's pending sub-stack, one collective per
+        disjoint-pattern group (plus, if acked, one counted reply per
+        group).  No-op when nothing is pending anywhere."""
+        if self.pending == 0:
+            return state
+        acked = self.ctx.transport.acked
+        for grp in self.groups:
+            boxes = [(i, self._boxes[i]) for i in grp
+                     if self._boxes[i].pending]
+            if not boxes:
+                continue
+            group_tag = None
+            hdr_rows, pay_rows, union = [], [], []
+            for _, box in boxes:
+                n = box.pending
+                w_ivs, grants = [], []
+                for cls, addr, nw, h_s, tok in box._lint_rows:
+                    if cls == am.LONG and nw:
+                        w_ivs.append(_lint.Interval(addr, nw))
+                    elif (cls == am.SHORT and h_s == hd.H_ADD
+                          and addr is not None and tok is not None):
+                        grants.append((tok, addr))
+                tag = _lint.emit(
+                    "mailbox_flush", box.pattern, writes=tuple(w_ivs),
+                    token=self.token, acked=acked,
+                    credit_grants=tuple(grants), mailbox_id=id(self),
+                    segment_words=self.ctx.segment_words,
+                    detail={"rows": n, "multi": True})
+                group_tag = group_tag or tag
+                union.extend((s, d) for s, d in box.pattern)
+                with _lint.scope(tag):
+                    cols = {name: box._stack_column(name)
+                            for name in _ROW_FIELDS}
+                    hdrs = am.encode_batch(
+                        n, src=self.ctx.my_id(),
+                        dst=ops._dst_of(self.ctx, box.pattern), **cols)
+                    if acked:
+                        # each pattern's final row is acked; the counted
+                        # group reply returns one credit per pattern
+                        hdrs = hdrs.at[n - 1, 0].set(
+                            hdrs[n - 1, 0] & ~am.FLAG_ASYNC)
+                    hdrs = ops._mask_nonparticipants(self.ctx, box.pattern,
+                                                     hdrs)
+                    hdr_rows.append(hdrs)
+                    pay_rows.append(box._stack_payloads())
+                    state = gc.dataclasses_replace(
+                        state, tx_words=state.tx_words + jnp.where(
+                            ops._is_sender(self.ctx, box.pattern),
+                            box._tx_words, 0))
+                box._fields.clear()
+                box._payloads.clear()
+                box._lint_rows.clear()
+                box._tx_words = 0
+                box.flushes += 1
+            union = sorted(set(union))
+            with _lint.scope(group_tag):
+                hdr_r, pay_r = ops._exchange(
+                    self.ctx, union, jnp.concatenate(hdr_rows, axis=0),
+                    jnp.concatenate(pay_rows, axis=0))
+                state = gc.ingress_stack(self.ctx, state, hdr_r, pay_r,
+                                         self.msg_words)
+                if acked:
+                    # the ack lands on the mailbox token regardless of
+                    # per-row tokens; any non-async non-NOP row counts
+                    state = ops._counted_group_reply(
+                        self.ctx, state, union, hdr_r,
+                        token=self.token, classes=None)
+        self.flushes += 1
+        return state
+
+
 class ReplyMailbox:
     """Deferred-ack aggregation: the reply side of the actor layer.
 

@@ -52,6 +52,28 @@ def _build_jacobi():
     return fn, (st, blocks), lambda: fn.lower(st, blocks).compile().as_text()
 
 
+def _build_jacobi_steady():
+    """Jacobi steady state: 4 piggybacked iterations in one scan.
+
+    The budget divides out the trip count: 2 collective-permutes per
+    iteration (one per halo direction, no ack collectives — acks ride
+    the next iteration's reverse-link packet) plus the 2 loop-exit
+    ledger drains.
+    """
+    import jax.numpy as jnp
+
+    from repro.apps.jacobi import JacobiApp
+    from repro.core.address_space import GlobalAddressSpace
+
+    app = JacobiApp(n=64, kernels=8, iters=4, transport=_tiny_tcp(),
+                    piggyback=True)
+    gas = GlobalAddressSpace(app.ctx)
+    st = gas.make_global_state()
+    blocks = jnp.zeros((8, 64 // 8, 64), jnp.float32)
+    fn = app.build()
+    return fn, (st, blocks), lambda: fn.lower(st, blocks).compile().as_text()
+
+
 def _build_actors_mailbox():
     """The actor-layer headline: 1024 4-word sends -> one flush."""
     import jax
@@ -141,6 +163,9 @@ def _build_kv_migrate():
 ENTRIES: tuple[Entry, ...] = (
     Entry("jacobi", "Jacobi halo exchange (64x64, 8 kernels, 16-word MTU)",
           8, _build_jacobi),
+    Entry("jacobi-steady",
+          "Jacobi steady state: 4 piggybacked iterations, <=2 CPs/iter",
+          8, _build_jacobi_steady),
     Entry("actors-mailbox", "1024 4-word mailbox sends, one flush + wait",
           8, _build_actors_mailbox),
     Entry("moe-dispatch", "MoE a2a expert dispatch, mesh (2,4), 2 layers",

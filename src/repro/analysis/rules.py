@@ -40,10 +40,14 @@ def _common_dsts(a: CommEvent, b: CommEvent) -> tuple[int, ...]:
 
 
 def _grant_indices(events, token: int | None):
-    """Indices of events that grant credits on ``token``."""
+    """Indices of events that grant credits on ``token``: explicit
+    Short-AM grants, a packet whose piggyback lane carries that token's
+    deferred acks home, or a ledger drain."""
     out = []
     for k, ev in enumerate(events):
-        if any(t == token for t, _ in ev.credit_grants):
+        if any(t == token for t, _ in ev.credit_grants) \
+                or (token is not None and ev.piggyback_token == token) \
+                or (ev.drains_deferred and ev.token == token):
             out.append(k)
     return out
 
@@ -57,7 +61,10 @@ def _ordered_before(events, i: int, j: int) -> bool:
             return True
         if ev.op == "wait_replies" and ei.acked and ei.token is not None \
                 and ev.token == ei.token:
-            if not ei.deferred_reply:
+            # acks deferred through a ReplyMailbox or a receiver-side
+            # piggyback ledger only order once a grant event (flush,
+            # piggyback lane, or drain) sits between the op and the wait
+            if not (ei.deferred_reply or ei.defer_ack):
                 return True
             if any(i < g < k for g in _grant_indices(events, ei.token)):
                 return True
@@ -165,6 +172,10 @@ def check_r3(events) -> list[Finding]:
     known: dict[int, bool] = {}
     contributors: dict[int, list[CommEvent]] = {}
     mailboxes: dict[int, set[int]] = {}
+    # receiver-side piggyback ledger: acks a defer_ack put owes, pending
+    # a reverse-link packet (piggyback_token) or an explicit drain
+    deferred: dict[int, int] = {}
+    deferred_evs: dict[int, list[CommEvent]] = {}
     all_unknown = False
 
     def bump(token, n, ev):
@@ -199,11 +210,30 @@ def check_r3(events) -> list[Finding]:
             contributors.pop(t, None)
             mailboxes.pop(t, None)
             continue
-        if ev.token is None and (ev.acked or ev.credit_grants):
+        if ev.token is None and (ev.acked or ev.credit_grants
+                                 or ev.drains_deferred):
             all_unknown = True
             continue
+        # the piggyback lane is loaded from the ledger as of SEND time,
+        # so it moves acks pooled by *earlier* events (including this
+        # call's own defer, which lands at the receiver only afterwards)
+        if ev.piggyback_token is not None:
+            moved = deferred.pop(ev.piggyback_token, 0)
+            if moved:
+                bump(ev.piggyback_token, moved, ev)
+            deferred_evs.pop(ev.piggyback_token, None)
+        if ev.drains_deferred:
+            moved = deferred.pop(ev.token, 0)
+            if moved:
+                bump(ev.token, moved, ev)
+            deferred_evs.pop(ev.token, None)
+            continue
         if ev.acked and not ev.deferred_reply:
-            bump(ev.token, 1, ev)
+            if ev.defer_ack:
+                deferred[ev.token] = deferred.get(ev.token, 0) + 1
+                deferred_evs.setdefault(ev.token, []).append(ev)
+            else:
+                bump(ev.token, 1, ev)
         for t, n in ev.credit_grants:
             bump(t, n, ev)
             contributors.setdefault(t, [])
@@ -233,6 +263,20 @@ def check_r3(events) -> list[Finding]:
                              "(flush/put without credit consumption) "
                              "accumulate across phases and corrupt later "
                              "wait counts")))
+        for t, cnt in sorted(deferred.items()):
+            if cnt > 0 and known.get(t, True):
+                evs = deferred_evs.get(t, [])
+                out.append(Finding(
+                    rule="R3", severity=WARNING,
+                    events=tuple(e.seq for e in evs),
+                    sites=tuple(e.site() for e in evs),
+                    waived=_waiver_of(*evs) if evs else None,
+                    message=(f"{cnt} deferred ack(s) on token {t} are "
+                             "stranded in the receiver ledger: no later "
+                             "reverse-link packet piggybacks them "
+                             "(piggyback_token) and no drain_deferred_acks "
+                             "ships them, so the sender's wait_replies on "
+                             f"token {t} can never be satisfied")))
     return out
 
 

@@ -39,7 +39,7 @@ import jax
 
 # ops that write destination segment memory
 WRITE_OPS = ("put_long", "put_long_strided", "put_long_vectored",
-             "mailbox_flush")
+             "put_long_multi", "mailbox_flush")
 # ops that read remote segment memory
 READ_OPS = ("get_medium", "get_long")
 # ordering / bookkeeping ops
@@ -86,6 +86,11 @@ class CommEvent:
     acked: bool = False                 # earns one credit on `token`
     asynchronous: bool = False
     deferred_reply: bool = False        # ack routed through a ReplyMailbox
+    defer_ack: bool = False             # ack ledgered at the receiver
+    piggyback_token: int | None = None  # this packet carries that token's
+                                        # deferred acks home (grants them)
+    drains_deferred: bool = False       # drain_deferred_acks: ships the
+                                        # residual ledger for `token`
     wait_n: int | None = None           # wait_replies count (None = traced)
     credit_grants: tuple[tuple[int, int], ...] = ()  # (token, count) grants
     handler: int | None = None

@@ -13,8 +13,21 @@ Segment layout per kernel: [0, N) = top halo row, [N, 2N) = bottom halo.
 
 The paper's footnote-2 limitation — at grid 4096 a halo row exceeds the
 9000-byte jumbo frame and their runs *fail* — is handled here by the
-transparent >MTU segmentation in :func:`repro.core.ops.put_long`; the
-benchmark runs exactly that configuration.
+transparent >MTU segmentation in :func:`repro.core.ops.put_long_multi`;
+the benchmark runs exactly that configuration.
+
+Steady-state wire plan (``piggyback=True``, the default on an acked
+transport): both halo puts go through one ``put_long_multi`` call with
+``defer_ack`` — the up/down patterns share every interior kernel as a
+source, so they cannot merge into one permutation, but neither put
+ships a reply collective.  Instead each direction's data packet carries
+the *opposite* direction's acks home in its piggyback lane (token 1 =
+up puts, token 2 = down puts; the up packet travels the reverse of the
+down link, so it piggybacks token 2's acks and vice versa).  That makes
+the loop body exactly 2 collective-permutes per iteration — down from 4
+— with iteration *k*'s acks arriving on iteration *k+1*'s packets, so
+the waits are gated past the first iteration and a pair of
+``drain_deferred_acks`` after the loop balances the books.
 """
 
 from __future__ import annotations
@@ -43,6 +56,8 @@ class JacobiApp:
     iters: int
     transport: object = TCP
     use_pallas: bool = False
+    piggyback: bool = True    # defer halo acks onto the next iteration's
+                              # reverse-link data packet (acked transports)
 
     def __post_init__(self):
         assert self.n % self.kernels == 0
@@ -57,27 +72,64 @@ class JacobiApp:
 
     # -- one iteration (runs inside shard_map) --------------------------------
 
-    def _halo_exchange(self, st: PgasState, block: jnp.ndarray) -> PgasState:
+    @property
+    def _use_piggyback(self) -> bool:
+        return self.piggyback and self.transport.acked and self.kernels > 1
+
+    def _halo_exchange(self, st: PgasState, block: jnp.ndarray,
+                       it=None) -> PgasState:
         n = self.n
         if self.kernels == 1:
             return st
-        # my top row -> upper neighbor's *bottom* halo [n, 2n)
-        st = ops.put_long(self.ctx, st, block[0], self.up, dst_addr=n,
-                          handler=hd.H_WRITE, token=1)
+        me = self.ctx.my_id()
+        has_down = (me < self.kernels - 1).astype(jnp.int32)
+        has_up = (me > 0).astype(jnp.int32)
+        # my top row -> upper neighbor's *bottom* halo [n, 2n);
         # my bottom row -> lower neighbor's *top* halo [0, n)
-        st = ops.put_long(self.ctx, st, block[-1], self.down, dst_addr=0,
-                          handler=hd.H_WRITE, token=2)
+        items = [(block[0], self.up, n), (block[-1], self.down, 0)]
+        if self._use_piggyback:
+            # Steady state: no reply collectives at all.  Receivers
+            # ledger the acks and each direction's data packet carries
+            # the OPPOSITE direction's ledgered acks home (the up packet
+            # travels the reverse of the down link, so pb_token=2).
+            st = ops.put_long_multi(self.ctx, st, items,
+                                    handler=hd.H_WRITE, tokens=[1, 2],
+                                    defer_ack=True, piggyback_tokens=[2, 1])
+            # iteration k's ack rides iteration k+1's packet: wait only
+            # from the second iteration on (drain_deferred_acks after
+            # the loop balances the final iteration)
+            ready = (jnp.asarray(it) > 0).astype(jnp.int32) \
+                if it is not None else jnp.zeros((), jnp.int32)
+            st = ops.wait_replies(self.ctx, st, 1, has_up * ready)
+            st = ops.wait_replies(self.ctx, st, 2, has_down * ready)
+            return st
+        st = ops.put_long_multi(self.ctx, st, items, handler=hd.H_WRITE,
+                                tokens=[1, 2],
+                                asynchronous=not self.transport.acked)
         if self.transport.acked:
             # Replies coalesce across >MTU segmentation (only the final
             # packet of a halo row is acked), so each halo *message*
             # earns exactly one credit regardless of how many packets
             # the transport split it into.
-            me = self.ctx.my_id()
-            has_down = (me < self.kernels - 1).astype(jnp.int32)
-            has_up = (me > 0).astype(jnp.int32)
             # replies for token 1 come from puts I sent up, etc.
             st = ops.wait_replies(self.ctx, st, 1, has_up)
             st = ops.wait_replies(self.ctx, st, 2, has_down)
+        return st
+
+    def _drain_acks(self, st: PgasState) -> PgasState:
+        """Loop exit for the piggyback plan: the last iteration's acks
+        are still ledgered at the halo receivers; ship them home (the
+        token-1 ledger lives at up-put receivers = the down link's
+        senders, and vice versa) and consume the final credit."""
+        if not self._use_piggyback:
+            return st
+        me = self.ctx.my_id()
+        st = ops.drain_deferred_acks(self.ctx, st, self.down, token=1)
+        st = ops.drain_deferred_acks(self.ctx, st, self.up, token=2)
+        st = ops.wait_replies(self.ctx, st, 1,
+                              (me > 0).astype(jnp.int32))
+        st = ops.wait_replies(self.ctx, st, 2,
+                              (me < self.kernels - 1).astype(jnp.int32))
         return st
 
     def _stencil(self, block_pad: jnp.ndarray, kid) -> jnp.ndarray:
@@ -98,10 +150,10 @@ class JacobiApp:
                     & (gcol > 0) & (gcol < n - 1))
         return jnp.where(interior, stencil.astype(mid.dtype), mid)
 
-    def _iteration(self, st: PgasState, block: jnp.ndarray):
+    def _iteration(self, st: PgasState, block: jnp.ndarray, it=None):
         n = self.n
         kid = self.ctx.my_id()
-        st = self._halo_exchange(st, block)
+        st = self._halo_exchange(st, block, it)
         top_halo = st.segment[:n]
         bot_halo = st.segment[n:2 * n]
         # boundary kernels have no halo: use zero rows (masked anyway)
@@ -125,13 +177,14 @@ class JacobiApp:
             st = jax.tree.map(lambda x: x[0], st)
             block = block[0]
 
-            def body(carry, _):
+            def body(carry, it):
                 st, blk = carry
-                st, blk = self._iteration(st, blk)
+                st, blk = self._iteration(st, blk, it)
                 return (st, blk), ()
 
-            (st, block), _ = jax.lax.scan(body, (st, block), None,
-                                          length=self.iters)
+            (st, block), _ = jax.lax.scan(body, (st, block),
+                                          jnp.arange(self.iters))
+            st = self._drain_acks(st)
             return (jax.tree.map(lambda x: x[None], st), block[None])
 
         spec = P(("kernel",))

@@ -123,7 +123,7 @@ class GlobalAddressSpace:
                 segment=init.reshape(n, self.segment_words).astype(self.dtype),
                 credits=leaves.credits, barrier_epoch=leaves.barrier_epoch,
                 rx_words=leaves.rx_words, tx_words=leaves.tx_words,
-                error=leaves.error)
+                error=leaves.error, deferred_acks=leaves.deferred_acks)
         shd = self._sharding()
 
         def put(leaf):

@@ -5,7 +5,7 @@ stream — the hardware GAScore parses a single AXIS burst, it never
 receives the header and the payload as separate transactions.  This
 module reproduces that layout exactly: a *packet* is one int32 vector
 
-    [ header (12 words) | extra (optional int32 section) | payload bits ]
+    [ header (14 words) | extra (optional int32 section) | payload bits ]
 
 where the payload's 32-bit lanes are bitcast to int32 (lossless both
 ways), so a whole AM — header, vectored address list, data — crosses a
@@ -14,7 +14,7 @@ For >MTU AMs the op layer stacks ``nseg`` such packets into a
 ``(nseg, HDR_WORDS + packet_words)`` matrix and still ships them with
 one collective (see :mod:`repro.core.ops`).
 
-The header is a fixed 12-word int32 vector so it can travel through the
+The header is a fixed 14-word int32 vector so it can travel through the
 same typed stream as the payload (the GAScore parses it with dynamic
 slices, exactly like the hardware IP parses the AXIS stream).  An
 all-zero header is an explicit NOP: kernels that do not participate in a
@@ -35,6 +35,8 @@ Word layout::
     9  blk_words words per strided block
     10 nblocks   number of strided blocks
     11 seq       segment sequence number (word offset) for >MTU segmentation
+    12 pb_token  piggyback lane: token whose deferred acks ride this packet
+    13 pb_count  piggyback lane: number of deferred acks carried
 
 The class/flag split mirrors the paper: three AM classes, each with
 put/get direction, FIFO vs memory payload source, optional strided /
@@ -43,6 +45,16 @@ Reply coalescing for segmented AMs rides on the async flag: the op
 layer marks every segment but the last asynchronous, so an acked >MTU
 message costs one reply total — one credit per *message*, not per
 packet.
+
+Reply piggybacking (the one-collective steady state): a message flagged
+``FLAG_DEFER_ACK`` asks the receiver to *ledger* the owed ack
+(``state.deferred_acks[token] += 1``) instead of shipping a header-only
+reply collective.  A later message travelling the reverse link carries
+the owed acks home in the piggyback lane: ``FLAG_PIGGYBACK`` plus
+``pb_token``/``pb_count`` grant ``credits[pb_token] += pb_count`` at
+ingress.  In a steady-state loop (Jacobi halo exchange) the next
+iteration's data packet already crosses the reverse link, so the ack
+collective disappears entirely.
 """
 
 from __future__ import annotations
@@ -52,7 +64,7 @@ import dataclasses
 import jax.numpy as jnp
 from jax import lax
 
-HDR_WORDS = 12
+HDR_WORDS = 14
 
 # -- message classes (word 0, low 3 bits) ------------------------------------
 NOP = 0
@@ -68,11 +80,15 @@ FLAG_FIFO = 1 << 5       # payload from kernel, not from shared memory
 FLAG_STRIDED = 1 << 6    # strided Long
 FLAG_VECTORED = 1 << 7   # vectored Long
 FLAG_REPLY = 1 << 8      # this message is an auto-generated reply
+FLAG_PIGGYBACK = 1 << 9  # pb_token/pb_count carry deferred acks home
+FLAG_DEFER_ACK = 1 << 10  # receiver ledgers the ack instead of replying
 
 FIELDS = (
     "type", "src", "dst", "nwords", "dst_addr", "src_addr",
     "handler", "token", "stride", "blk_words", "nblocks", "seq",
+    "pb_token", "pb_count",
 )
+assert len(FIELDS) == HDR_WORDS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +107,8 @@ class Header:
     blk_words: jnp.ndarray
     nblocks: jnp.ndarray
     seq: jnp.ndarray
+    pb_token: jnp.ndarray
+    pb_count: jnp.ndarray
 
     @property
     def msg_class(self):
@@ -101,7 +119,8 @@ class Header:
 
 
 def make_type(msg_class: int, *, asynchronous=False, get=False, fifo=False,
-              strided=False, vectored=False, reply=False) -> int:
+              strided=False, vectored=False, reply=False,
+              defer_ack=False) -> int:
     t = msg_class & _CLASS_MASK
     if asynchronous:
         t |= FLAG_ASYNC
@@ -115,11 +134,13 @@ def make_type(msg_class: int, *, asynchronous=False, get=False, fifo=False,
         t |= FLAG_VECTORED
     if reply:
         t |= FLAG_REPLY
+    if defer_ack:
+        t |= FLAG_DEFER_ACK
     return t
 
 
 def encode(**fields) -> jnp.ndarray:
-    """Build a 12-word int32 header. Unspecified fields are zero."""
+    """Build a HDR_WORDS-word int32 header. Unspecified fields are zero."""
     unknown = set(fields) - set(FIELDS)
     if unknown:
         raise ValueError(f"unknown header fields: {unknown}")
@@ -156,6 +177,15 @@ def decode(hdr: jnp.ndarray) -> Header:
 def wire_dtype_ok(dtype) -> bool:
     """Payload dtypes that bitcast losslessly onto the int32 wire."""
     return jnp.dtype(dtype).itemsize == 4
+
+
+def wire_words(dtype, nwords) -> int:
+    """32-bit words a payload of ``nwords`` ``dtype`` elements occupies
+    on the wire.  For 32-bit dtypes this is ``nwords`` (the fused-packet
+    bitcast is 1:1); sub-32-bit payloads on the split fallback ship
+    ``nwords * itemsize`` bytes, i.e. fewer wire words — tx accounting
+    must count what actually crosses the link, not element counts."""
+    return -(-int(nwords) * jnp.dtype(dtype).itemsize // 4)
 
 
 def to_wire(payload: jnp.ndarray) -> jnp.ndarray:

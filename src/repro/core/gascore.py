@@ -326,6 +326,7 @@ def ingress_stack(ctx: ShoalContext, state: PgasState, hdr_rows: jnp.ndarray,
         hd_ = am.decode(h)
         st = _ingress_long_padded(ctx, st, hd_, p, packet_words)
         st = ingress_short(ctx, st, hd_)
+        st = ingress_ack_lanes(st, hd_)
         return st, ()
 
     state = dataclasses_replace(
@@ -388,10 +389,40 @@ def serve_get_batch(ctx: ShoalContext, state: PgasState,
 
 def auto_reply(hdr: am.Header) -> jnp.ndarray:
     """Build the automatic reply header for an acked AM; NOP (all-zero)
-    when the message was asynchronous, a NOP, or itself a reply."""
+    when the message was asynchronous, a NOP, itself a reply, or
+    defer-acked (the owed ack rides a later packet's piggyback lane)."""
     rep = am.reply_for(hdr)
-    suppress = (hdr.msg_class == am.NOP) | hdr.flag(am.FLAG_ASYNC) | hdr.flag(am.FLAG_REPLY)
+    suppress = (hdr.msg_class == am.NOP) | hdr.flag(am.FLAG_ASYNC) \
+        | hdr.flag(am.FLAG_REPLY) | hdr.flag(am.FLAG_DEFER_ACK)
     return jnp.where(suppress, jnp.zeros_like(rep), rep)
+
+
+def ingress_ack_lanes(state: PgasState, hdr: am.Header) -> PgasState:
+    """Process the deferred-ack / piggyback lanes of one ingressed packet.
+
+    Two independent gates (a packet can carry both):
+
+    * FLAG_DEFER_ACK on an acked (non-async) message: instead of a reply
+      collective, ledger the owed ack — ``deferred_acks[token] += 1``.
+      The ledger is keyed by the put's token, which the steady-state
+      protocol uses as a link id: each link direction gets its own token
+      so the acks ride home over the right reverse link.
+    * FLAG_PIGGYBACK: this packet carries ``pb_count`` acks owed on
+      ``pb_token`` from the sender's ledger — grant them:
+      ``credits[pb_token] += pb_count``.
+    """
+    live = hdr.msg_class != am.NOP
+    defer = live & hdr.flag(am.FLAG_DEFER_ACK) \
+        & ~hdr.flag(am.FLAG_ASYNC) & ~hdr.flag(am.FLAG_REPLY)
+    tok = jnp.clip(hdr.token, 0, hd.NUM_TOKENS - 1)
+    deferred = state.deferred_acks.at[tok].add(defer.astype(jnp.int32))
+
+    carry = live & hdr.flag(am.FLAG_PIGGYBACK)
+    pb_tok = jnp.clip(hdr.pb_token, 0, hd.NUM_TOKENS - 1)
+    credits = state.credits.at[pb_tok].add(
+        jnp.where(carry, hdr.pb_count, 0).astype(jnp.int32))
+    return dataclasses_replace(state, deferred_acks=deferred,
+                               credits=credits)
 
 
 def ingress_reply(state: PgasState, hdr: am.Header) -> PgasState:
@@ -408,6 +439,7 @@ def dataclasses_replace(state: PgasState, **kw) -> PgasState:
         segment=state.segment, credits=state.credits,
         barrier_epoch=state.barrier_epoch, rx_words=state.rx_words,
         tx_words=state.tx_words, error=state.error,
+        deferred_acks=state.deferred_acks,
     )
     fields.update(kw)
     return PgasState(**fields)

@@ -163,14 +163,74 @@ def _resolve_nwords(payload, from_segment_addr, nwords, op_name: str) -> int:
     return int(nwords)
 
 
-def _seg_types(msg_class: int, nseg: int, *, asynchronous: bool, **flags):
+def _seg_types(msg_class: int, nseg: int, *, asynchronous: bool,
+               defer_ack: bool = False, **flags):
     """Per-segment type words: every segment but the last is async, so
-    an acked message triggers exactly one (coalesced) reply."""
-    t_last = am.make_type(msg_class, asynchronous=asynchronous, **flags)
+    an acked message triggers exactly one (coalesced) reply.  With
+    ``defer_ack`` the final segment asks the receiver to ledger that one
+    ack for a later packet's piggyback lane instead of replying."""
+    t_last = am.make_type(msg_class, asynchronous=asynchronous,
+                          defer_ack=defer_ack, **flags)
     t_tail = am.make_type(msg_class, asynchronous=True, **flags)
     if nseg == 1:
         return t_last
     return jnp.where(jnp.arange(nseg) == nseg - 1, t_last, t_tail)
+
+
+def _check_ack_lanes(op: str, ctx: ShoalContext, *, asynchronous,
+                     defer_ack, piggyback_token, reply_via) -> None:
+    """Trace-time validation of the deferred-ack / piggyback kwargs."""
+    if defer_ack:
+        if asynchronous:
+            raise ValueError(
+                f"{op}: defer_ack defers the ack of an *acked* message; "
+                "asynchronous=True has no ack to defer")
+        if not ctx.transport.acked:
+            raise ValueError(
+                f"{op}: defer_ack needs an acked transport — this "
+                "transport never replies, so there is no ack to defer")
+        if reply_via is not None:
+            raise ValueError(
+                f"{op}: defer_ack (receiver-side ledger) and reply_via "
+                "(sender-side reply mailbox) are two different deferred-"
+                "ack mechanisms; pick one")
+    if piggyback_token is not None:
+        if _lint.static_int(piggyback_token) is None:
+            raise ValueError(
+                f"{op}: piggyback_token must be trace-time static (the "
+                "header lane and the lint schedule are built at trace "
+                "time)")
+        if not 0 <= int(piggyback_token) < hd.NUM_TOKENS:
+            raise ValueError(
+                f"{op}: piggyback_token {int(piggyback_token)} outside "
+                f"[0, {hd.NUM_TOKENS})")
+
+
+# header column indices used when patching encoded rows in place
+_I_TYPE = am.FIELDS.index("type")
+_I_TOKEN = am.FIELDS.index("token")
+_I_PB_TOKEN = am.FIELDS.index("pb_token")
+_I_PB_COUNT = am.FIELDS.index("pb_count")
+
+
+def _attach_piggyback(ctx: ShoalContext, state: PgasState, pattern: Pattern,
+                      hdrs: jnp.ndarray, pb_token):
+    """Load this sender's deferred-ack ledger for ``pb_token`` into the
+    final row's piggyback lane and zero the ledger slot (senders only).
+
+    Must run BEFORE :func:`_mask_nonparticipants`: non-senders' rows are
+    zeroed afterwards anyway, and their ledger slot is left untouched.
+    Returns ``(state, hdrs)``.
+    """
+    tok = int(pb_token)
+    count = state.deferred_acks[tok]
+    hdrs = hdrs.at[-1, _I_TYPE].set(hdrs[-1, _I_TYPE] | am.FLAG_PIGGYBACK)
+    hdrs = hdrs.at[-1, _I_PB_TOKEN].set(tok)
+    hdrs = hdrs.at[-1, _I_PB_COUNT].set(count)
+    sender = _is_sender(ctx, pattern)
+    ledger = state.deferred_acks.at[tok].set(
+        jnp.where(sender, 0, state.deferred_acks[tok]))
+    return gc.dataclasses_replace(state, deferred_acks=ledger), hdrs
 
 
 # --------------------------------------------------------------------------
@@ -250,7 +310,8 @@ def put_medium(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray | None,
         buf = gc.egress_batch(ctx, state, hdrs, payload if fifo else None, W)
         state = gc.dataclasses_replace(
             state, tx_words=state.tx_words +
-            jnp.where(_is_sender(ctx, pattern), nwords, 0))
+            jnp.where(_is_sender(ctx, pattern),
+                      am.wire_words(state.segment.dtype, nwords), 0))
         hdr_r, pay_r = _exchange(ctx, pattern, hdrs, buf)
         state, delivered = gc.ingress_medium_batch(state, hdr_r, pay_r, W)
         state = _deliver_reply(ctx, state, pattern, am.decode(hdr_r[-1]),
@@ -266,7 +327,8 @@ def put_medium(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray | None,
 def put_long(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray | None,
              pattern: Pattern, dst_addr, *, handler=hd.H_WRITE, token=0,
              asynchronous: bool = False, from_segment_addr=None,
-             nwords: int | None = None, reply_via=None) -> PgasState:
+             nwords: int | None = None, reply_via=None,
+             defer_ack: bool = False, piggyback_token=None) -> PgasState:
     """Long AM: one-sided put into the destination kernel's segment at
     ``dst_addr``, applied through ``handler`` (H_WRITE = plain put,
     H_ADD = remote accumulate, ...).  FIFO variant when ``payload`` is
@@ -275,15 +337,29 @@ def put_long(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray | None,
     >MTU payloads ship as one ``(nseg, HDR+W)`` packet stack — a single
     collective — and are absorbed by a scanned GAScore ingress; an acked
     message earns ONE credit (the final segment carries the ack).
+
+    ``defer_ack=True`` removes even the reply collective: the receiver
+    ledgers the owed ack (``state.deferred_acks[token]``) and a later
+    packet crossing the reverse link carries it home — either another
+    put with ``piggyback_token=token`` or :func:`drain_deferred_acks`.
+    ``piggyback_token=t`` loads THIS packet's piggyback lane with the
+    sender's ledgered acks for ``t`` (acks this kernel owes for puts it
+    *received* over the link this packet now travels in reverse).
     """
     nwords = _resolve_nwords(payload, from_segment_addr, nwords, "put_long")
     fifo = from_segment_addr is None
+    _check_ack_lanes("put_long", ctx, asynchronous=asynchronous,
+                     defer_ack=defer_ack, piggyback_token=piggyback_token,
+                     reply_via=reply_via)
     tag = _lint.emit(
         "put_long", pattern,
         writes=(_lint.Interval(_lint.static_int(dst_addr), nwords),),
         token=_lint.static_int(token),
         acked=ctx.transport.acked and not asynchronous,
         asynchronous=asynchronous, deferred_reply=reply_via is not None,
+        defer_ack=defer_ack,
+        piggyback_token=(None if piggyback_token is None
+                         else int(piggyback_token)),
         handler=_lint.static_int(handler), segment_words=ctx.segment_words)
     with _lint.scope(tag):
         segs = _segments(nwords, ctx.transport.max_packet_words)
@@ -293,21 +369,284 @@ def put_long(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray | None,
         hdrs = am.encode_batch(
             nseg,
             type=_seg_types(am.LONG, nseg, asynchronous=asynchronous,
-                            fifo=fifo),
+                            defer_ack=defer_ack, fifo=fifo),
             src=ctx.my_id(), dst=_dst_of(ctx, pattern), nwords=ws,
             dst_addr=dst_addr + offs,
             src_addr=0 if fifo else from_segment_addr + offs,
             handler=handler, token=token, seq=offs)
+        if piggyback_token is not None:
+            state, hdrs = _attach_piggyback(ctx, state, pattern, hdrs,
+                                            piggyback_token)
         hdrs = _mask_nonparticipants(ctx, pattern, hdrs)
         buf = gc.egress_batch(ctx, state, hdrs, payload if fifo else None, W)
         state = gc.dataclasses_replace(
             state, tx_words=state.tx_words +
-            jnp.where(_is_sender(ctx, pattern), nwords, 0))
+            jnp.where(_is_sender(ctx, pattern),
+                      am.wire_words(state.segment.dtype, nwords), 0))
         hdr_r, pay_r = _exchange(ctx, pattern, hdrs, buf)
         state = gc.ingress_long_batch(ctx, state, hdr_r, pay_r, W)
+        # the final row is the only non-async one: it carries the ack
+        # lanes (defer ledger bump and/or piggybacked ack grant)
+        state = gc.ingress_ack_lanes(state, am.decode(hdr_r[-1]))
         return _deliver_reply(ctx, state, pattern, am.decode(hdr_r[-1]),
-                              asynchronous=asynchronous, token=token,
-                              reply_via=reply_via)
+                              asynchronous=asynchronous or defer_ack,
+                              token=token, reply_via=reply_via)
+
+
+def group_disjoint_patterns(patterns: list[Pattern]) -> list[list[int]]:
+    """Greedily group patterns into valid union permutations.
+
+    Two patterns may share one ``ppermute`` only when BOTH their source
+    sets and their destination sets are disjoint — ``lax.ppermute``
+    allows each kernel to send at most one buffer and receive at most
+    one.  Disjoint rings (even->odd and odd->even) merge; Jacobi's
+    up/down halo pair does not (every interior kernel sends on both
+    links), which is exactly why its steady state needs reply
+    piggybacking rather than more merging.  Returns index lists into
+    ``patterns``, first-fit in input order.
+    """
+    groups: list[list[int]] = []
+    gsrcs: list[set[int]] = []
+    gdsts: list[set[int]] = []
+    for i, pat in enumerate(patterns):
+        srcs = {s for s, _ in pat}
+        dsts = {d for _, d in pat}
+        for g in range(len(groups)):
+            if not (gsrcs[g] & srcs) and not (gdsts[g] & dsts):
+                groups[g].append(i)
+                gsrcs[g] |= srcs
+                gdsts[g] |= dsts
+                break
+        else:
+            groups.append([i])
+            gsrcs.append(set(srcs))
+            gdsts.append(set(dsts))
+    return groups
+
+
+def _counted_group_reply(ctx: ShoalContext, state: PgasState, union: Pattern,
+                         hdr_r: jnp.ndarray, *, token=None,
+                         classes: tuple[int, ...] | None = (am.LONG,)
+                         ) -> PgasState:
+    """ONE reply collective for a whole grouped packet stack.
+
+    Each receiver folds over the rows it just absorbed, counts the acked
+    ones (non-async, non-reply, non-deferred — exactly one per message,
+    since tail segments are async), and ships the count back as a Short
+    H_ADD over the reversed union.  The union permutation guarantees a
+    kernel received rows from at most one sender, so the dynamic token
+    read off the acked rows is single-valued per receiver; a static
+    ``token`` overrides it (mailbox flushes ack on the mailbox token
+    regardless of per-row tokens).  ``classes`` restricts which message
+    classes count (``None`` = any non-NOP row).
+    """
+    t_col = hdr_r[:, _I_TYPE]
+    cls = t_col & am._CLASS_MASK
+    if classes is None:
+        is_cls = cls != am.NOP
+    else:
+        is_cls = jnp.zeros(t_col.shape, bool)
+        for c in classes:
+            is_cls = is_cls | (cls == c)
+    needs = is_cls & ((t_col & (am.FLAG_ASYNC | am.FLAG_REPLY
+                                | am.FLAG_DEFER_ACK)) == 0)
+    cnt = jnp.sum(needs.astype(jnp.int32))
+    tok = (jnp.max(jnp.where(needs, hdr_r[:, _I_TOKEN], 0))
+           if token is None else token)
+    rev = _reverse(union)
+    hdr = am.encode(type=am.make_type(am.SHORT, asynchronous=True),
+                    src=ctx.my_id(), dst=_dst_of(ctx, rev),
+                    handler=hd.H_ADD, token=tok, dst_addr=cnt)
+    hdr = _mask_nonparticipants(ctx, rev, hdr)
+    hdr_back, _ = _exchange(ctx, rev, hdr, None)
+    return gc.ingress_short(ctx, state, am.decode(hdr_back))
+
+
+def put_long_multi(ctx: ShoalContext, state: PgasState, items, *,
+                   handler=hd.H_WRITE, token=0, tokens=None,
+                   asynchronous: bool = False, defer_ack: bool = False,
+                   piggyback_tokens=None, reply_via=None) -> PgasState:
+    """Multi-destination Long put: batch several puts over different
+    patterns into as few collectives as possible.
+
+    ``items`` is ``[(payload, pattern, dst_addr), ...]`` (FIFO variant).
+    Patterns whose source AND destination sets are disjoint form a valid
+    union permutation: their per-destination ``(nseg, HDR+W)`` packet
+    stacks concatenate and the whole group crosses the links as ONE
+    ``ppermute``, absorbed by the scanned mixed-class
+    :func:`repro.core.gascore.ingress_stack`.  Patterns that share a
+    source or destination (Jacobi's up+down halo pair) cannot legally
+    merge and land in separate groups — see
+    :func:`group_disjoint_patterns`.
+
+    Ack accounting: one credit per item, on that item's token
+    (``tokens`` gives per-item tokens; default all ``token``).  On the
+    immediate-ack path each group costs ONE extra reply collective
+    total (:func:`_counted_group_reply`), not one per item.  With
+    ``defer_ack=True`` no reply collective exists at all: receivers
+    ledger the acks and ``piggyback_tokens[i]`` loads item *i*'s final
+    packet with the sender's ledgered acks for that token (the steady-
+    state loop shape: each direction's data packet carries the opposite
+    direction's acks home).
+
+    Destination intervals that overlap across items sharing a
+    destination kernel raise :class:`VectoredAliasError` — the landed
+    value would depend on stack order — unless the call is wrapped in
+    ``repro.analysis.waiver(reason)``.
+    """
+    if not items:
+        raise ValueError("put_long_multi: empty item list")
+    k = len(items)
+    toks = list(tokens) if tokens is not None else [token] * k
+    if len(toks) != k:
+        raise ValueError(
+            f"put_long_multi: {k} items but {len(toks)} tokens")
+    pbs = (list(piggyback_tokens) if piggyback_tokens is not None
+           else [None] * k)
+    if len(pbs) != k:
+        raise ValueError(
+            f"put_long_multi: {k} items but {len(pbs)} piggyback_tokens")
+    for pb in pbs:
+        _check_ack_lanes("put_long_multi", ctx, asynchronous=asynchronous,
+                         defer_ack=defer_ack, piggyback_token=pb,
+                         reply_via=reply_via)
+    parsed = []
+    for i, item in enumerate(items):
+        try:
+            payload, pattern, dst_addr = item
+        except (TypeError, ValueError):
+            raise ValueError(
+                "put_long_multi: items are (payload, pattern, dst_addr) "
+                f"triples; item {i} is {item!r}") from None
+        if payload is None:
+            raise ValueError(
+                f"put_long_multi: item {i} has no payload (only the "
+                "FIFO variant batches; use put_long for memory-sourced)")
+        pat = [(int(s), int(d)) for s, d in pattern]
+        parsed.append((payload, pat, dst_addr, int(payload.size)))
+    ivs = [_lint.Interval(_lint.static_int(a), nw)
+           for _, _, a, nw in parsed]
+    alias = None
+    for i in range(k):
+        for j in range(i + 1, k):
+            common = ({d for _, d in parsed[i][1]}
+                      & {d for _, d in parsed[j][1]})
+            if common and ivs[i].known and ivs[j].known \
+                    and ivs[i].overlaps(ivs[j]):
+                alias = (i, j, sorted(common))
+                break
+        if alias:
+            break
+    if alias is not None and _lint.current_waiver() is None:
+        i, j, common = alias
+        raise VectoredAliasError(
+            f"put_long_multi: items {i} ({ivs[i]}) and {j} ({ivs[j]}) "
+            f"overlap at destination kernel(s) {common} within one "
+            "batched call, so the landed value depends on stack order "
+            "(silent last-writer-wins). Give the items disjoint "
+            "intervals, or wrap the call in "
+            "repro.analysis.waiver(reason) if the overlap is deliberate.")
+    groups = group_disjoint_patterns([p for _, p, _, _ in parsed])
+    acked = ctx.transport.acked and not asynchronous
+    mtu = ctx.transport.max_packet_words
+    for gi, grp in enumerate(groups):
+        # one packet width for the whole group so stacks concatenate;
+        # re-planning every item at this width keeps egress's pad +
+        # reshape exact (all rows but an item's last are full)
+        W = min(mtu, max(parsed[i][3] for i in grp))
+        group_tag = None
+        hdr_rows, pay_rows, union = [], [], []
+        for i in grp:
+            payload, pat, dst_addr, nw = parsed[i]
+            tag = _lint.emit(
+                "put_long_multi", pat, writes=(ivs[i],),
+                token=_lint.static_int(toks[i]), acked=acked,
+                asynchronous=asynchronous,
+                deferred_reply=reply_via is not None,
+                defer_ack=defer_ack,
+                piggyback_token=None if pbs[i] is None else int(pbs[i]),
+                handler=_lint.static_int(handler),
+                segment_words=ctx.segment_words,
+                self_overlap=alias is not None and i in alias[:2],
+                detail={"group": gi, "item": i, "n_items": k})
+            group_tag = group_tag or tag
+            union.extend(pat)
+            segs = _segments(nw, W)
+            nseg = len(segs)
+            offs = jnp.asarray([o for o, _ in segs], jnp.int32)
+            ws = jnp.asarray([w for _, w in segs], jnp.int32)
+            with _lint.scope(tag):
+                hdrs = am.encode_batch(
+                    nseg,
+                    type=_seg_types(am.LONG, nseg,
+                                    asynchronous=asynchronous,
+                                    defer_ack=defer_ack, fifo=True),
+                    src=ctx.my_id(), dst=_dst_of(ctx, pat), nwords=ws,
+                    dst_addr=dst_addr + offs, handler=handler,
+                    token=toks[i], seq=offs)
+                if pbs[i] is not None:
+                    state, hdrs = _attach_piggyback(ctx, state, pat,
+                                                    hdrs, pbs[i])
+                hdrs = _mask_nonparticipants(ctx, pat, hdrs)
+                pay_rows.append(gc.egress_batch(ctx, state, hdrs,
+                                                payload, W))
+                hdr_rows.append(hdrs)
+                state = gc.dataclasses_replace(
+                    state, tx_words=state.tx_words +
+                    jnp.where(_is_sender(ctx, pat),
+                              am.wire_words(state.segment.dtype, nw), 0))
+        union = sorted(set(union))
+        with _lint.scope(group_tag):
+            hdr_r, pay_r = _exchange(ctx, union,
+                                     jnp.concatenate(hdr_rows, axis=0),
+                                     jnp.concatenate(pay_rows, axis=0))
+            state = gc.ingress_stack(ctx, state, hdr_r, pay_r, W)
+            if acked and not defer_ack:
+                if reply_via is not None:
+                    for i in grp:
+                        reply_via.note(parsed[i][1], toks[i])
+                else:
+                    state = _counted_group_reply(ctx, state, union, hdr_r)
+    return state
+
+
+def drain_deferred_acks(ctx: ShoalContext, state: PgasState,
+                        pattern: Pattern, token) -> PgasState:
+    """Ship this kernel's residual deferred-ack ledger for ``token``
+    home as one header-only Short H_ADD along ``pattern`` (1
+    collective) and zero the ledger slot.
+
+    Loop exit for the piggyback protocol: in steady state, iteration
+    *k*'s acks ride iteration *k+1*'s reverse-link data packet, so when
+    the loop ends the final iteration's acks are still ledgered at the
+    receivers.  ``pattern`` must be the REVERSE link of the defer-acked
+    puts: its senders are the kernels holding the ledger, its
+    destinations the kernels whose ``wait_replies(token, ...)`` is
+    still owed.  The count rides in the handler-arg word (dynamic), so
+    one drain balances any number of outstanding puts.
+    """
+    t_s = _lint.static_int(token)
+    if t_s is None:
+        raise ValueError("drain_deferred_acks: token must be trace-time "
+                         "static (it names the ledger slot)")
+    if not 0 <= t_s < hd.NUM_TOKENS:
+        raise ValueError(
+            f"drain_deferred_acks: token {t_s} outside [0, {hd.NUM_TOKENS})")
+    tag = _lint.emit("drain_deferred_acks", pattern, token=t_s,
+                     acked=False, asynchronous=True, drains_deferred=True,
+                     handler=hd.H_ADD, segment_words=ctx.segment_words)
+    with _lint.scope(tag):
+        count = state.deferred_acks[t_s]
+        hdr = am.encode(type=am.make_type(am.SHORT, asynchronous=True),
+                        src=ctx.my_id(), dst=_dst_of(ctx, pattern),
+                        handler=hd.H_ADD, token=token, dst_addr=count)
+        hdr = _mask_nonparticipants(ctx, pattern, hdr)
+        sender = _is_sender(ctx, pattern)
+        ledger = state.deferred_acks.at[t_s].set(
+            jnp.where(sender, 0, state.deferred_acks[t_s]))
+        state = gc.dataclasses_replace(state, deferred_acks=ledger)
+        hdr_r, _ = _exchange(ctx, pattern, hdr, None)
+        return gc.ingress_short(ctx, state, am.decode(hdr_r))
 
 
 def _strides_may_overlap(stride, blk_words: int, nblocks: int) -> bool:
@@ -382,7 +721,8 @@ def put_long_strided(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray,
         buf = gc.egress_batch(ctx, state, hdrs, payload, W)
         state = gc.dataclasses_replace(
             state, tx_words=state.tx_words +
-            jnp.where(_is_sender(ctx, pattern), nwords, 0))
+            jnp.where(_is_sender(ctx, pattern),
+                      am.wire_words(state.segment.dtype, nwords), 0))
         hdr_r, pay_r = _exchange(ctx, pattern, hdrs, buf)
         state = gc.ingress_strided_batch(ctx, state, hdr_r, pay_r, blk_words,
                                          min(per, nblocks), ordered)
@@ -452,7 +792,8 @@ def put_long_vectored(ctx: ShoalContext, state: PgasState,
         buf = gc.egress(ctx, state, am.decode(hdr), payload, nwords)
         state = gc.dataclasses_replace(
             state, tx_words=state.tx_words +
-            jnp.where(_is_sender(ctx, pattern), nwords, 0))
+            jnp.where(_is_sender(ctx, pattern),
+                      am.wire_words(state.segment.dtype, nwords), 0))
         addrs = jnp.asarray(dst_addrs, jnp.int32)
         hdr_r, addrs_r, pay_r = _exchange(ctx, pattern, hdr, buf, extra=addrs)
         h = am.decode(hdr_r)
@@ -464,7 +805,8 @@ def put_long_vectored(ctx: ShoalContext, state: PgasState,
                 nwords=jnp.asarray(w, jnp.int32),
                 dst_addr=addrs_r[i], src_addr=h.src_addr, handler=h.handler,
                 token=h.token, stride=h.stride, blk_words=h.blk_words,
-                nblocks=h.nblocks, seq=h.seq)
+                nblocks=h.nblocks, seq=h.seq, pb_token=h.pb_token,
+                pb_count=h.pb_count)
             state = gc.ingress_long(ctx, state, sub_hdr,
                                     lax.dynamic_slice(pay_r, (off,), (w,)), w)
             off += w

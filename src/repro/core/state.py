@@ -39,6 +39,11 @@ class PgasState:
     rx_words: jnp.ndarray         # () int32 total words received
     tx_words: jnp.ndarray         # () int32 total words sent
     error: jnp.ndarray            # () int32 sticky error bits
+    deferred_acks: jnp.ndarray    # (NUM_TOKENS,) int32 acks owed per link
+    # deferred_acks is the receiver-side piggyback ledger: a put flagged
+    # FLAG_DEFER_ACK bumps deferred_acks[token] here instead of shipping
+    # a reply collective; the next packet this kernel sends over the
+    # reverse link carries the count home in its pb_token/pb_count lane.
 
     @staticmethod
     def make(segment_words: int, dtype=jnp.float32) -> "PgasState":
@@ -49,6 +54,7 @@ class PgasState:
             rx_words=jnp.zeros((), jnp.int32),
             tx_words=jnp.zeros((), jnp.int32),
             error=jnp.zeros((), jnp.int32),
+            deferred_acks=jnp.zeros((hd.NUM_TOKENS,), jnp.int32),
         )
 
 

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.actors import Mailbox, ReplyMailbox
+from repro.actors import Mailbox, MultiMailbox, ReplyMailbox
 from repro.core import handlers as hd, ops
 from repro.core.address_space import GlobalAddressSpace
 from repro.core.state import ShoalContext
@@ -50,68 +50,134 @@ def make(transport, segment_words):
 def sequential_schedule_oracle(schedule, segment_words):
     """Numpy reference semantics for a put/wait/barrier schedule.
 
-    ``schedule`` rows are ``("put", start, words, value, token, acked)``,
-    ``("wait", token, n)``, or ``("barrier",)``.  Executes the writes in
-    program order, then independently derives what the analyzer should
-    report — this is jax-free and shares no code with
-    :mod:`repro.analysis.rules`, so the property test in
+    Row kinds::
+
+        ("put",       start, words, value, token, acked[, group])
+        ("put_defer", start, words, value, token[, group])
+        ("piggyback", token)
+        ("drain",     token)
+        ("wait",      token, n)
+        ("barrier",)
+
+    ``put_defer`` is an acked put whose ack is *ledgered at the
+    receiver* instead of shipped (the reply-piggybacking protocol);
+    ``piggyback`` models the later reverse-link data packet whose header
+    lane carries that token's ledgered acks home, and ``drain`` the
+    explicit loop-exit ``drain_deferred_acks`` — both move the whole
+    ledger slot into the sender's credits.  Rows sharing a ``group`` id
+    model one ``put_long_multi`` call: their stacks cross the links in
+    ONE collective and apply in row order, so same-group rows are never
+    mutually reorderable (overlapping same-group intervals raise
+    ``VectoredAliasError`` at trace time anyway).
+
+    Executes the writes in program order, then independently derives
+    what the analyzer should report — this is jax-free and shares no
+    code with :mod:`repro.analysis.rules`, so the property test in
     tests/test_comm_lint.py can cross-check race verdicts against it.
 
     Returns a dict with:
 
     * ``segment`` — final numpy segment in program order;
     * ``unordered_overlaps`` — (i, j) put pairs whose arrival order the
-      transport may legally swap (no barrier, no wait on put i's ack
-      token between them) and whose intervals overlap;
+      transport may legally swap (no barrier; no wait on put i's ack
+      token between them — for a deferred ack the wait only orders once
+      a piggyback/drain grant for that token sits between put and wait)
+      and whose intervals overlap;
     * ``divergent`` — the subset of those pairs where delaying put i's
       arrival until after put j actually changes final memory (a pair
       can be non-divergent yet racy when a later put shadows it);
     * ``underflow_events`` — schedule indices of waits that drain more
       credits than were issued by then;
-    * ``leaked_tokens`` — tokens with credits left at the end.
+    * ``leaked_tokens`` — tokens with credits left at the end;
+    * ``stranded_acks`` — tokens whose receiver ledger is nonzero at the
+      end: no reverse-link packet piggybacked them and no drain shipped
+      them, so the sender's wait can never be satisfied.
     """
     n = len(schedule)
+
+    def norm(ev):
+        kind = ev[0]
+        if kind == "put":
+            return {"kind": "put", "start": ev[1], "words": ev[2],
+                    "value": ev[3], "token": ev[4], "acked": ev[5],
+                    "defer": False,
+                    "group": ev[6] if len(ev) > 6 else None}
+        if kind == "put_defer":
+            return {"kind": "put", "start": ev[1], "words": ev[2],
+                    "value": ev[3], "token": ev[4], "acked": True,
+                    "defer": True,
+                    "group": ev[5] if len(ev) > 5 else None}
+        if kind in ("piggyback", "drain"):
+            return {"kind": "grant", "token": ev[1]}
+        if kind == "wait":
+            return {"kind": "wait", "token": ev[1], "n": ev[2]}
+        return {"kind": "barrier"}
+
+    rows = [norm(ev) for ev in schedule]
 
     def run(order):
         seg = np.zeros(segment_words, np.float64)
         for idx in order:
-            ev = schedule[idx]
-            if ev[0] == "put":
-                _, start, words, value, _tok, _acked = ev
-                seg[start:start + words] = value
+            r = rows[idx]
+            if r["kind"] == "put":
+                seg[r["start"]:r["start"] + r["words"]] = r["value"]
         return seg
 
     base = run(range(n))
 
     credits: dict = {}
+    ledger: dict = {}
     underflow_events = []
-    for idx, ev in enumerate(schedule):
-        if ev[0] == "put" and ev[5]:
-            credits[ev[4]] = credits.get(ev[4], 0) + 1
-        elif ev[0] == "wait":
-            _, tok, cnt = ev
+    for idx, r in enumerate(rows):
+        if r["kind"] == "put":
+            if r["defer"]:
+                ledger[r["token"]] = ledger.get(r["token"], 0) + 1
+            elif r["acked"]:
+                credits[r["token"]] = credits.get(r["token"], 0) + 1
+        elif r["kind"] == "grant":
+            credits[r["token"]] = (credits.get(r["token"], 0)
+                                   + ledger.pop(r["token"], 0))
+        elif r["kind"] == "wait":
+            tok, cnt = r["token"], r["n"]
             if cnt > credits.get(tok, 0):
                 underflow_events.append(idx)
             credits[tok] = credits.get(tok, 0) - cnt
     leaked = sorted(t for t, c in credits.items() if c > 0)
+    stranded = sorted(t for t, c in ledger.items() if c > 0)
+
+    def ordered_before(i, j):
+        ri = rows[i]
+        for k in range(i + 1, j):
+            rk = rows[k]
+            if rk["kind"] == "barrier":
+                return True
+            if rk["kind"] == "wait" and ri["acked"] \
+                    and rk["token"] == ri["token"]:
+                if not ri["defer"]:
+                    return True      # i's ack was consumed: ordered
+                # a deferred ack reaches the wait only via a grant
+                # (piggyback lane or drain) issued after the put
+                if any(rows[g]["kind"] == "grant"
+                       and rows[g]["token"] == ri["token"]
+                       for g in range(i + 1, k)):
+                    return True
+        return False
 
     unordered, divergent = [], []
     for i in range(n):
-        if schedule[i][0] != "put":
+        if rows[i]["kind"] != "put":
             continue
         for j in range(i + 1, n):
-            between = schedule[i + 1:j]
-            if any(e[0] == "barrier" for e in between):
-                break            # i is ordered before everything later
-            if schedule[i][5] and any(
-                    e[0] == "wait" and e[1] == schedule[i][4]
-                    for e in between):
-                break            # i's ack was consumed: ordered
-            if schedule[j][0] != "put":
+            if rows[j]["kind"] != "put":
                 continue
-            si, wi = schedule[i][1], schedule[i][2]
-            sj, wj = schedule[j][1], schedule[j][2]
+            si, wi = rows[i]["start"], rows[i]["words"]
+            sj, wj = rows[j]["start"], rows[j]["words"]
             if not (si < sj + wj and sj < si + wi):
+                continue
+            if rows[i]["group"] is not None \
+                    and rows[i]["group"] == rows[j]["group"]:
+                continue             # one collective: stack order fixed
+            if ordered_before(i, j):
                 continue
             unordered.append((i, j))
             order = [k for k in range(n) if k != i]
@@ -120,7 +186,7 @@ def sequential_schedule_oracle(schedule, segment_words):
                 divergent.append((i, j))
     return {"segment": base, "unordered_overlaps": unordered,
             "divergent": divergent, "underflow_events": underflow_events,
-            "leaked_tokens": leaked}
+            "leaked_tokens": leaked, "stranded_acks": stranded}
 
 
 def test_mailbox_mixed_stack_semantics():
@@ -189,6 +255,49 @@ def test_1024_sends_two_collectives():
     cps_u = cp_count(gas_u, prog_u)
     check("mailbox/1024-sends async budget", cps_u <= 1,
           f"({cps_u:.0f} collective-permutes <= 1)")
+
+
+def test_multi_mailbox_grouped_flush():
+    """Two disjoint destination patterns flush as ONE collective + ONE
+    counted reply, with correct per-pattern delivery and one credit per
+    pattern on the mailbox token."""
+    ctx, gas = make(TCP, 256)
+    even = [(i, i + 1) for i in range(0, N, 2)]
+    odd = [(i, (i + 1) % N) for i in range(1, N, 2)]
+
+    def prog(st):
+        mmb = MultiMailbox(ctx, [even, odd], msg_words=4,
+                           watermark=1 << 20, token=6)
+        me1 = (ctx.my_id() + 1).astype(jnp.float32)
+        ones = jnp.ones((4,), jnp.float32)
+        for i in range(3):
+            st = mmb.send(st, 0, (me1 * 10 + i) * ones, dst_addr=4 * i)
+            st = mmb.send(st, 1, -(me1 * 10 + i) * ones,
+                          dst_addr=16 + 4 * i)
+        st = mmb.flush(st)
+        assert mmb.flushes == 1 and mmb.pending == 0 and mmb.msgs_sent == 6
+        assert mmb.groups == [[0, 1]]        # the patterns merged
+        # every kernel SENDS on exactly one of the two rings (masked out
+        # of the other), so the counted group reply returns one credit
+        return ops.wait_replies(ctx, st, token=6, n=1)
+
+    cps = cp_count(gas, prog)
+    check("multi-mailbox/flush budget", cps == 2,
+          f"({cps:.0f} collective-permutes == 2 for 2 patterns)")
+    out = jax.jit(gas.spmd(prog))(gas.make_global_state())
+    seg = np.asarray(out.segment)
+    for k in range(N):
+        src1 = ((k - 1) % N) + 1             # my sender on either ring
+        sign = 1.0 if k % 2 == 1 else -1.0   # odd kernels: even-ring rows
+        base = 0 if k % 2 == 1 else 16
+        for i in range(3):
+            np.testing.assert_allclose(seg[k, base + 4 * i:base + 4 * i + 4],
+                                       sign * (src1 * 10 + i),
+                                       err_msg=f"kernel {k} msg {i}")
+    assert not np.asarray(out.error).any()
+    assert (np.asarray(out.credits) == 0).all()
+    check("multi-mailbox/grouped-flush semantics", True,
+          f"(2 patterns x 3 msgs, {N} kernels)")
 
 
 def test_watermark_autoflush():
@@ -264,6 +373,7 @@ def test_async_put_skips_reply_collective():
 def main():
     test_mailbox_mixed_stack_semantics()
     test_1024_sends_two_collectives()
+    test_multi_mailbox_grouped_flush()
     test_watermark_autoflush()
     test_reply_mailbox_coalesces_acks()
     test_async_put_skips_reply_collective()

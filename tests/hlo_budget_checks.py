@@ -15,7 +15,16 @@ belief:
 * >MTU ``get_medium``: 2 (batched request stack + batched response);
 * ``put_long_vectored``: 2 (addresses ride inside the fused packet);
 * one full Jacobi iteration with both halo rows segmenting: 4 puts'
-  worth of traffic in 2 * 2 collectives.
+  worth of traffic in 2 * 2 collectives;
+* ``put_long_multi`` over two disjoint rings: the stacks merge into ONE
+  union-permutation collective + one counted group reply (and with
+  ``defer_ack=True`` the reply disappears entirely: 1 collective);
+* sub-32-bit (bf16) acked put: the split header/payload fallback is 3
+  collectives — budgeted so the fallback's cost stays measured, and its
+  ``tx_words`` accounting (bytes on wire, not element count) is covered
+  by tests/md_checks.py;
+* a two-pattern ``MultiMailbox`` flush: both sub-stacks cross as one
+  grouped collective + one counted reply.
 """
 
 import dataclasses
@@ -92,6 +101,56 @@ def main():
                             asynchronous=True)
 
     check("micro.put_long_async_4seg", measure(gas_u, put_async))
+
+    # two disjoint rings (even->odd, odd->even): sources AND dests are
+    # disjoint, so both packet stacks merge into one union ppermute;
+    # the whole group acks through ONE counted reply
+    EVEN = [(i, i + 1) for i in range(0, N, 2)]
+    ODD = [(i, (i + 1) % N) for i in range(1, N, 2)]
+
+    def multi_merged(st):
+        items = [(jnp.arange(50, dtype=jnp.float32), EVEN, 8),
+                 (jnp.ones((34,), jnp.float32), ODD, 64)]
+        st = ops.put_long_multi(ctx, st, items, token=4)
+        return ops.wait_replies(ctx, st, token=4, n=1)
+
+    check("micro.put_long_multi_merged", measure(gas, multi_merged))
+
+    def multi_deferred(st):
+        items = [(jnp.arange(50, dtype=jnp.float32), EVEN, 8),
+                 (jnp.ones((34,), jnp.float32), ODD, 64)]
+        st = ops.put_long_multi(ctx, st, items, token=4, defer_ack=True)
+        # receivers ledger the acks; a later reverse-link packet (or a
+        # drain) carries them home — nothing more to ship HERE
+        return st
+
+    check("micro.put_long_multi_deferred", measure(gas, multi_deferred))
+
+    # sub-32-bit payloads can't bitcast onto the int32 wire: the acked
+    # put falls back to split header + payload collectives + 1 reply
+    gas_b = GlobalAddressSpace(ctx, dtype=jnp.bfloat16)
+
+    def put_bf16(st):
+        pay = jnp.ones((10,), jnp.bfloat16)
+        st = ops.put_long(ctx, st, pay, RING, dst_addr=8, token=1)
+        return ops.wait_replies(ctx, st, token=1, n=1)
+
+    check("micro.put_long_bf16_fallback", measure(gas_b, put_bf16))
+
+    # MultiMailbox over the two disjoint rings: 3 sends per pattern
+    # flush as ONE grouped stack + ONE counted reply (2 credits)
+    from repro.actors import MultiMailbox
+
+    def multi_flush(st):
+        mmb = MultiMailbox(ctx, [EVEN, ODD], msg_words=4,
+                           watermark=1 << 20, token=6)
+        base = jnp.arange(4, dtype=jnp.float32)
+        for i in range(6):
+            st = mmb.send(st, i % 2, base + i, dst_addr=4 * i)
+        st = mmb.flush(st)
+        return ops.wait_replies(ctx, st, token=6, n=1)
+
+    check("micro.multi_mailbox_flush", measure(gas, multi_flush))
 
     # one full Jacobi iteration with segmenting halo rows: n=64 grid on
     # 8 kernels, 16-word MTU -> each 64-word halo row is 4 packets; two

@@ -247,6 +247,150 @@ def test_async_udp_semantics():
     np.testing.assert_allclose(np.asarray(st.segment)[:, 0:2], 1.0)
 
 
+def test_put_long_multi_semantics():
+    check("put_long_multi: disjoint rings merge, interleaved stacks land")
+    import dataclasses
+    mesh = make_cpu_mesh(N, ("kernel",))
+    tiny = dataclasses.replace(TCP, max_packet_bytes=64)   # 16-word MTU
+    ctx = ShoalContext(mesh=mesh, axes=("kernel",), transport=tiny,
+                       segment_words=128)
+    gas = GlobalAddressSpace(ctx)
+    even = [(i, i + 1) for i in range(0, N, 2)]        # srcs/dsts disjoint
+    odd = [(i, (i + 1) % N) for i in range(1, N, 2)]   # from even's: merge
+
+    def prog(st):
+        me = ctx.my_id().astype(jnp.float32)
+        # 40 words = 3 rows at the 16-word MTU, 10 words = 1 row; the
+        # two stacks interleave in one union-permutation collective
+        items = [(jnp.arange(40, dtype=jnp.float32) + 1000.0 * me, even, 8),
+                 (jnp.arange(10, dtype=jnp.float32) - 1000.0 * me, odd, 64)]
+        st = ops.put_long_multi(ctx, st, items, token=4)
+        return ops.wait_replies(ctx, st, token=4, n=1)
+
+    st = jax.jit(gas.spmd(prog))(gas.make_global_state())
+    seg = np.asarray(st.segment)
+    for k in range(N):
+        src = (k - 1) % N
+        if k % 2 == 1:     # receives the even-ring item
+            np.testing.assert_allclose(seg[k, 8:48],
+                                       np.arange(40.0) + 1000.0 * src)
+        else:              # receives the odd-ring item
+            np.testing.assert_allclose(seg[k, 64:74],
+                                       np.arange(10.0) - 1000.0 * src)
+    # every kernel sent exactly one item and the ONE counted group reply
+    # returned exactly one credit for it, drained by the wait
+    assert (np.asarray(st.credits) == 0).all()
+    assert (np.asarray(st.error) == 0).all()
+
+
+def test_put_long_multi_alias_guard():
+    check("put_long_multi: cross-item overlap raises VectoredAliasError")
+    mesh = make_cpu_mesh(N, ("kernel",))
+    ctx = ShoalContext(mesh=mesh, axes=("kernel",), transport=TCP,
+                       segment_words=64)
+    gas = GlobalAddressSpace(ctx)
+    # both items land on kernel 1; [8, 12) and [10, 14) overlap, so the
+    # value at [10, 12) depends on stack order
+    items_of = lambda: [(jnp.ones(4, jnp.float32), [(0, 1)], 8),
+                        (jnp.full((4,), 2.0), [(2, 1)], 10)]
+
+    def prog(st):
+        return ops.put_long_multi(ctx, st, items_of(), token=1,
+                                  asynchronous=True)
+
+    try:
+        jax.jit(gas.spmd(prog)).lower(gas.make_global_state())
+        raised = False
+    except ops.VectoredAliasError:
+        raised = True
+    assert raised, "overlapping put_long_multi items must raise"
+
+    from repro.analysis import waiver
+
+    def prog_waived(st):
+        with waiver("alias test: last-writer-wins is intended"):
+            return ops.put_long_multi(ctx, st, items_of(), token=1,
+                                      asynchronous=True)
+
+    jax.jit(gas.spmd(prog_waived)).lower(gas.make_global_state())
+
+
+def test_piggyback_steady_loop():
+    check("reply piggybacking: 2 CPs/iteration steady state, clean drain")
+    from repro.analysis import hlo_budget
+    mesh = make_cpu_mesh(N, ("kernel",))
+    ctx = ShoalContext(mesh=mesh, axes=("kernel",), transport=TCP,
+                       segment_words=64)
+    gas = GlobalAddressSpace(ctx)
+    rring = [((i + 1) % N, i) for i in range(N)]
+    iters = 5
+
+    def prog(st):
+        def body(st, it):
+            # forward puts defer acks (token 1); the reverse packet
+            # piggybacks them home, and vice versa (token 2) — zero ack
+            # collectives inside the loop
+            items = [(jnp.full((4,), 1.0 + it), RING, 8),
+                     (jnp.full((4,), 101.0 + it), rring, 16)]
+            st = ops.put_long_multi(ctx, st, items, tokens=[1, 2],
+                                    defer_ack=True, piggyback_tokens=[2, 1])
+            # iteration k's acks ride iteration k+1's packets
+            ready = (it > 0).astype(jnp.int32)
+            st = ops.wait_replies(ctx, st, token=1, n=ready)
+            st = ops.wait_replies(ctx, st, token=2, n=ready)
+            return st, ()
+
+        st, _ = jax.lax.scan(body, st, jnp.arange(iters))
+        # loop exit: the final iteration's acks are still ledgered at
+        # the receivers; one drain per link ships them home
+        st = ops.drain_deferred_acks(ctx, st, rring, token=1)
+        st = ops.drain_deferred_acks(ctx, st, RING, token=2)
+        st = ops.wait_replies(ctx, st, token=1, n=1)
+        st = ops.wait_replies(ctx, st, token=2, n=1)
+        return st
+
+    jitted = jax.jit(gas.spmd(prog))
+    st0 = gas.make_global_state()
+    st = jitted(st0)
+    seg = np.asarray(st.segment)
+    for k in range(N):
+        np.testing.assert_allclose(seg[k, 8:12], float(iters))       # 1+it
+        np.testing.assert_allclose(seg[k, 16:20], 100.0 + iters)
+    # no ack stranded: every deferred ack was piggybacked or drained,
+    # every credit consumed, no underflow tripped
+    assert (np.asarray(st.deferred_acks) == 0).all()
+    assert (np.asarray(st.credits) == 0).all()
+    assert (np.asarray(st.error) == 0).all()
+    # the whole program is 2 CPs per iteration (trip-weighted) + the 2
+    # one-off drains — the per-iteration ack collectives are GONE
+    stats = hlo_budget.measure(jitted.lower(st0).compile().as_text())
+    cps = stats.ops.get("collective-permute", 0.0)
+    assert cps == 2 * iters + 2, f"steady state regressed: {cps} CPs"
+
+
+def test_bf16_wire_accounting():
+    check("sub-32-bit (bf16) split fallback: bytes-on-wire tx accounting")
+    mesh = make_cpu_mesh(N, ("kernel",))
+    ctx = ShoalContext(mesh=mesh, axes=("kernel",), transport=TCP,
+                       segment_words=64)
+    gas = GlobalAddressSpace(ctx, dtype=jnp.bfloat16)
+
+    def prog(st):
+        me1 = (ctx.my_id() + 1).astype(jnp.bfloat16)
+        pay = jnp.full((10,), 1.0, jnp.bfloat16) * me1
+        st = ops.put_long(ctx, st, pay, RING, dst_addr=4, token=1)
+        return ops.wait_replies(ctx, st, token=1, n=1)
+
+    st = jax.jit(gas.spmd(prog))(gas.make_global_state())
+    seg = np.asarray(st.segment.astype(jnp.float32))
+    for k in range(N):
+        np.testing.assert_allclose(seg[k, 4:14], ((k - 1) % N) + 1.0)
+    # 10 bf16 words are 20 bytes = 5 int32 wire words, not 10: the old
+    # element-count accounting overstated sub-32-bit wire volume 2x
+    assert (np.asarray(st.tx_words) == 5).all(), np.asarray(st.tx_words)
+    assert (np.asarray(st.error) == 0).all()
+
+
 def test_humboldt_two_sided():
     check("HUMboldt 4-phase send/recv")
     mesh = make_cpu_mesh(N, ("kernel",))
@@ -497,6 +641,10 @@ def main():
     test_mtu_segmentation_edge()
     test_mtu_gets_and_strided()
     test_async_udp_semantics()
+    test_put_long_multi_semantics()
+    test_put_long_multi_alias_guard()
+    test_piggyback_steady_loop()
+    test_bf16_wire_accounting()
     test_humboldt_two_sided()
     test_ring_collectives()
     test_trainer_backends_agree()

@@ -26,6 +26,13 @@ analyzer wall-time + HLO budget table into ``BENCH_comm.json`` under
 ``current.comm_lint`` (the comm/benches/baseline sections are left
 untouched).
 
+``--faults`` is the loss-resilience mode: it runs
+``bench_faults`` (the 0/1/5%-drop goodput sweep over the reliable-put
+protocol), asserts every drop rate still delivers bit-identical data
+with a drained dedup ledger, gates the 1%-drop retransmit cost and
+goodput against the ``[faults]`` section of ``comm_budgets.toml``, and
+merges the rows into ``BENCH_comm.json`` under ``current.faults``.
+
 ``--serving`` is the disaggregated-serving smoke mode: it runs
 ``bench_serving`` (mixed prefill/decode arrival trace through the
 admission front-end), asserts the KV-migration collective budget, the
@@ -279,9 +286,73 @@ def serving() -> None:
           f"{os.path.relpath(BENCH_JSON, REPO)})")
 
 
+def _load_fault_budgets() -> dict:
+    """The [faults] section of comm_budgets.toml (gates for --faults)."""
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.analysis.hlo_budget import load_budgets
+    return load_budgets().get("faults", {})
+
+
+def faults() -> None:
+    """Loss-resilience smoke: run the 0/1/5%-drop goodput sweep, assert
+    delivery stayed correct at every rate, gate the 1%-drop retransmit
+    cost + goodput against comm_budgets.toml [faults], and merge the
+    rows into BENCH_comm.json under ``current.faults`` (other sections
+    and the frozen baseline are left untouched)."""
+    print("name,value,derived")
+    code, out = run_sub("benchmarks.bench_faults", 8)
+    if code:
+        raise SystemExit(f"bench_faults failed (rc={code})")
+    rows = {name: (us, derived) for name, us, derived in parse_rows(out)}
+    budgets = _load_fault_budgets()
+    failures = []
+    for pct in ("0pct", "1pct", "5pct"):
+        ok = rows.get(f"faults/delivered-ok/{pct}")
+        if ok is None:
+            failures.append(f"faults/delivered-ok/{pct}: row missing")
+        elif ok[0] != 1.0:
+            failures.append(
+                f"faults/delivered-ok/{pct}: delivery broke under loss "
+                "(not bit-identical / ledger not drained / retries "
+                "exhausted)")
+    rounds = rows.get("faults/retransmit-rounds/1pct")
+    cap = float(budgets.get("retransmit_rounds_at_1pct_max", 0.5))
+    if rounds is None:
+        failures.append("faults/retransmit-rounds/1pct: row missing")
+    elif not rounds[0] <= cap:
+        failures.append(f"retransmit-rounds at 1%: {rounds[0]:.3f} "
+                        f"> budget {cap}")
+    good = rows.get("faults/goodput/1pct")
+    floor = float(budgets.get("goodput_at_1pct_min", 0.0))
+    if good is None:
+        failures.append("faults/goodput/1pct: row missing")
+    elif not good[0] >= floor:
+        failures.append(f"goodput at 1%: {good[0]:.3f} < floor {floor}")
+    if failures:
+        for f in failures:
+            print(f"FAULTS_FAIL {f}")
+        raise SystemExit(1)
+    doc = {"schema": "bench_comm/v1"}
+    if os.path.exists(BENCH_JSON):
+        with open(BENCH_JSON) as f:
+            doc = json.load(f)
+    doc.setdefault("current", {})["faults"] = {
+        name: {"value": us, "derived": derived}
+        for name, (us, derived) in rows.items()}
+    with open(BENCH_JSON, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"FAULTS_OK ({len(rows)} rows merged into "
+          f"{os.path.relpath(BENCH_JSON, REPO)}; retransmit-rounds "
+          f"{rounds[0]:.3f} <= {cap}, goodput {good[0]:.3f} >= {floor})")
+
+
 def main() -> None:
     if "--smoke" in sys.argv[1:]:
         smoke()
+        return
+    if "--faults" in sys.argv[1:]:
+        faults()
         return
     if "--serving" in sys.argv[1:]:
         serving()

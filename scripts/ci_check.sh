@@ -27,4 +27,10 @@ python benchmarks/run.py --smoke
 echo "== serving smoke (migration budget, bounded queue) =="
 python benchmarks/run.py --serving
 
+echo "== fault suite (CRC, retransmit/dedup, graceful degradation) =="
+python -m pytest -x -q tests/test_faults.py
+
+echo "== fault sweep (goodput + retransmit budgets under loss) =="
+python benchmarks/run.py --faults
+
 echo CI_CHECK_OK

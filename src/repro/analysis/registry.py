@@ -135,6 +135,45 @@ def _build_moe_dispatch():
             lambda: jfn.lower(params, batch).compile().as_text())
 
 
+def _build_lossy_put():
+    """Reliable put over a 1%-drop DCN link: 4-seg acked put + wait.
+
+    The compiled program unrolls 1 + max_retries attempt rounds, each a
+    data exchange plus an ack exchange — 2*(1+max_retries) CPs — but
+    rounds after delivery ship all-NOP packets, so the *dynamic* cost is
+    tracked by the ``retransmits`` state counter, not the CP count.
+    """
+    import jax
+
+    from repro.core import ops
+    from repro.core.address_space import GlobalAddressSpace
+    from repro.core.faults import FaultModel
+    from repro.core.state import ShoalContext
+    from repro.runtime import LossyTransport
+    from repro.runtime.topology import make_cpu_mesh
+
+    import jax.numpy as jnp
+
+    n = 8
+    ring = [(i, (i + 1) % n) for i in range(n)]
+    transport = LossyTransport(faults=FaultModel(drop=0.01, seed=7),
+                               max_packet_bytes=16, max_retries=4)
+    ctx = ShoalContext(mesh=make_cpu_mesh(n, ("kernel",)), axes=("kernel",),
+                       transport=transport, segment_words=64)
+    gas = GlobalAddressSpace(ctx)
+
+    def prog(st):
+        me = ctx.my_id()
+        pay = (jnp.arange(16, dtype=jnp.float32) + 1) * (me + 1)
+        st = ops.put_long(ctx, st, pay, ring, dst_addr=10, token=1)
+        return ops.wait_replies(ctx, st, token=1, n=1)
+
+    fn = gas.spmd(prog)
+    st0 = gas.make_global_state()
+    jfn = jax.jit(fn)
+    return fn, (st0,), lambda: jfn.lower(st0).compile().as_text()
+
+
 def _build_kv_migrate():
     """Disaggregated-serving KV migration (one vectored put + reply)."""
     import jax
@@ -172,6 +211,9 @@ ENTRIES: tuple[Entry, ...] = (
           8, _build_moe_dispatch),
     Entry("kv-migrate", "serving KV migration, prefill 0 -> decode 2",
           4, _build_kv_migrate),
+    Entry("lossy-put",
+          "reliable 4-seg put over 1%-drop DCN, retransmit + dedup",
+          8, _build_lossy_put),
 )
 
 

@@ -1,4 +1,4 @@
-"""Comm-safety rules R1-R4 over a recorded event schedule.
+"""Comm-safety rules R1-R5 over a recorded event schedule.
 
 The analyzer input is the ordered list of :class:`~repro.analysis.trace.
 CommEvent`s one Python trace of the program produced (SPMD dataflow: the
@@ -195,6 +195,14 @@ def check_r3(events) -> list[Finding]:
                 contributors.pop(t, None)
                 mailboxes.pop(t, None)
                 continue
+            if ev.timeout:
+                # timeout wait: drains min(have, n) and latches nothing —
+                # a shortfall is the *expected* outcome under loss, so no
+                # underflow finding; the balance cannot go negative
+                balance[t] = max(balance.get(t, 0) - ev.wait_n, 0)
+                contributors.pop(t, None)
+                mailboxes.pop(t, None)
+                continue
             if not all_unknown and known.get(t, True) \
                     and ev.wait_n > balance.get(t, 0):
                 issued = balance.get(t, 0)
@@ -316,6 +324,53 @@ def check_r4(events) -> list[Finding]:
     return out
 
 
+# --------------------------------------------------------------------------
+# R5: loss-resilience protocol hygiene on lossy transports
+# --------------------------------------------------------------------------
+
+def check_r5(events) -> list[Finding]:
+    """Lossy-link delivery semantics.
+
+    A retransmitting put whose receiver does not dedup redelivery is an
+    ERROR: a duplicated or re-sent segment is applied twice, which
+    corrupts accumulate handlers (H_ADD) and re-runs any non-idempotent
+    handler.  An acked put with no retry budget, or a fire-and-forget
+    put, on a lossy link is a WARNING — losses surface as
+    ERR_RETRY_EXHAUSTED / silent data loss respectively, which may be a
+    deliberate degradation policy but deserves a waiver saying so.
+    """
+    out: list[Finding] = []
+    for ev in events:
+        if not ev.lossy or ev.op not in WRITE_OPS:
+            continue
+        if ev.retries > 0 and not ev.dedup:
+            out.append(Finding(
+                rule="R5", severity=ERROR, events=(ev.seq,),
+                sites=(ev.site(),), waived=ev.waiver,
+                message=(f"{ev.site()} retransmits (up to {ev.retries}x) "
+                         "over a lossy link with dedup=False: a lost ack "
+                         "re-delivers segments the receiver already "
+                         "applied, so handlers run twice (double-applied "
+                         "H_ADD, re-run side effects) — enable the dedup "
+                         "ledger or drop the retry budget")))
+        elif ev.acked and ev.retries == 0:
+            out.append(Finding(
+                rule="R5", severity=WARNING, events=(ev.seq,),
+                sites=(ev.site(),), waived=ev.waiver,
+                message=(f"{ev.site()} is acked over a lossy link with no "
+                         "retransmit budget (max_retries=0): any single "
+                         "drop latches ERR_RETRY_EXHAUSTED immediately")))
+        elif not ev.acked:
+            out.append(Finding(
+                rule="R5", severity=WARNING, events=(ev.seq,),
+                sites=(ev.site(),), waived=ev.waiver,
+                message=(f"{ev.site()} is fire-and-forget over a lossy "
+                         "link: drops and corruptions are silent data "
+                         "loss (no ack, no retransmit) — acceptable only "
+                         "if the application tolerates holes")))
+    return out
+
+
 def analyze(events) -> list[Finding]:
     """Run all pass-1 rules over a recorded schedule."""
     findings: list[Finding] = []
@@ -323,4 +378,5 @@ def analyze(events) -> list[Finding]:
     findings.extend(check_r2(events))
     findings.extend(check_r3(events))
     findings.extend(check_r4(events))
+    findings.extend(check_r5(events))
     return findings

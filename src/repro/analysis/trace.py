@@ -92,6 +92,10 @@ class CommEvent:
     drains_deferred: bool = False       # drain_deferred_acks: ships the
                                         # residual ledger for `token`
     wait_n: int | None = None           # wait_replies count (None = traced)
+    timeout: bool = False               # wait_replies: partial-drain path
+    lossy: bool = False                 # traverses a fault-injecting link
+    retries: int = 0                    # retransmit bound (0 = no retry)
+    dedup: bool = True                  # receiver dedups redelivery (R5)
     credit_grants: tuple[tuple[int, int], ...] = ()  # (token, count) grants
     handler: int | None = None
     segment_words: int = 0

@@ -1,3 +1,3 @@
-from repro.checkpoint.checkpoint import CheckpointManager
+from repro.checkpoint.checkpoint import CheckpointManager, ChecksumError
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "ChecksumError"]

@@ -33,6 +33,42 @@ import jax
 import numpy as np
 
 
+class ChecksumError(IOError):
+    """A restored leaf file failed its manifest sha256 (bit rot, torn
+    write, or a transport fault on shared storage).  Carries enough to
+    act on: which file, what the manifest promised, what the bytes
+    hashed to."""
+
+    def __init__(self, path: str, file: str, expected: str, actual: str):
+        self.path = path
+        self.file = file
+        self.expected = expected
+        self.actual = actual
+        super().__init__(
+            f"checksum mismatch for leaf {path!r} ({file}): manifest "
+            f"sha256 {expected}, file hashed {actual} — the checkpoint "
+            "file is corrupt (re-read once already; restore from an "
+            "earlier step or re-replicate the file)")
+
+
+def _read_verified(d: str, entry: dict, name: str) -> np.ndarray:
+    """Load one leaf file, verifying its manifest sha256.
+
+    A mismatch is re-read ONCE before failing — a concurrent replicator
+    or page-cache race can yield one torn read on shared storage, but a
+    second identical mismatch means the bytes really are wrong, and we
+    raise :class:`ChecksumError` with both digests.
+    """
+    path = os.path.join(d, entry["file"])
+    actual = None
+    for _attempt in range(2):
+        with open(path, "rb") as f:
+            actual = hashlib.sha256(f.read()).hexdigest()
+        if actual == entry["sha256"]:
+            return np.load(path)
+    raise ChecksumError(name, entry["file"], entry["sha256"], actual)
+
+
 def _tree_paths(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
@@ -127,11 +163,10 @@ class CheckpointManager:
             _, shard_flat, _ = _tree_paths(shardings)
         for i, name in enumerate(names):
             entry = by_path[name]
-            arr = np.load(os.path.join(d, entry["file"]))
             if verify:
-                with open(os.path.join(d, entry["file"]), "rb") as f:
-                    if hashlib.sha256(f.read()).hexdigest() != entry["sha256"]:
-                        raise IOError(f"checksum mismatch for {name}")
+                arr = _read_verified(d, entry, name)
+            else:
+                arr = np.load(os.path.join(d, entry["file"]))
             if shard_flat is not None:
                 arr = jax.device_put(arr, shard_flat[i])
             else:

@@ -119,11 +119,10 @@ class GlobalAddressSpace:
             if init.size != self.total_words:
                 raise ValueError(
                     f"init has {init.size} words, address space has {self.total_words}")
-            leaves = PgasState(
-                segment=init.reshape(n, self.segment_words).astype(self.dtype),
-                credits=leaves.credits, barrier_epoch=leaves.barrier_epoch,
-                rx_words=leaves.rx_words, tx_words=leaves.tx_words,
-                error=leaves.error, deferred_acks=leaves.deferred_acks)
+            import dataclasses as _dc
+            leaves = _dc.replace(
+                leaves,
+                segment=init.reshape(n, self.segment_words).astype(self.dtype))
         shd = self._sharding()
 
         def put(leaf):

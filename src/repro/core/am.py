@@ -5,7 +5,7 @@ stream — the hardware GAScore parses a single AXIS burst, it never
 receives the header and the payload as separate transactions.  This
 module reproduces that layout exactly: a *packet* is one int32 vector
 
-    [ header (14 words) | extra (optional int32 section) | payload bits ]
+    [ header (16 words) | extra (optional int32 section) | payload bits ]
 
 where the payload's 32-bit lanes are bitcast to int32 (lossless both
 ways), so a whole AM — header, vectored address list, data — crosses a
@@ -14,7 +14,7 @@ For >MTU AMs the op layer stacks ``nseg`` such packets into a
 ``(nseg, HDR_WORDS + packet_words)`` matrix and still ships them with
 one collective (see :mod:`repro.core.ops`).
 
-The header is a fixed 14-word int32 vector so it can travel through the
+The header is a fixed 16-word int32 vector so it can travel through the
 same typed stream as the payload (the GAScore parses it with dynamic
 slices, exactly like the hardware IP parses the AXIS stream).  An
 all-zero header is an explicit NOP: kernels that do not participate in a
@@ -37,6 +37,20 @@ Word layout::
     11 seq       segment sequence number (word offset) for >MTU segmentation
     12 pb_token  piggyback lane: token whose deferred acks ride this packet
     13 pb_count  piggyback lane: number of deferred acks carried
+    14 epoch     send epoch: per-(src, token) message counter for dedup
+    15 crc       integrity word over the whole packet (see seal_packet)
+
+Integrity and delivery (the lossy-transport story): packets crossing a
+link class that may drop/duplicate/corrupt (see
+:class:`repro.runtime.transport.LossyTransport`) are *sealed* — the
+``crc`` word is a rotate-XOR fold over every other lane of the packet,
+guaranteed to flip when any single bit on the wire flips.  Receivers
+check the seal (:func:`packet_crc_ok`) and treat failed rows as drops
+(latching ``ERR_CRC``).  The ``epoch`` word stamps each message with a
+per-(src, token) sequence number so redelivered packets (sender
+retransmits after a lost ack) are recognised and not re-applied: the
+receiver's dedup ledger keys on (token, epoch, seq).  A NOP row is
+all-zero and its seal is zero, so NOPs pass the check for free.
 
 The class/flag split mirrors the paper: three AM classes, each with
 put/get direction, FIFO vs memory payload source, optional strided /
@@ -64,7 +78,7 @@ import dataclasses
 import jax.numpy as jnp
 from jax import lax
 
-HDR_WORDS = 14
+HDR_WORDS = 16
 
 # -- message classes (word 0, low 3 bits) ------------------------------------
 NOP = 0
@@ -86,7 +100,7 @@ FLAG_DEFER_ACK = 1 << 10  # receiver ledgers the ack instead of replying
 FIELDS = (
     "type", "src", "dst", "nwords", "dst_addr", "src_addr",
     "handler", "token", "stride", "blk_words", "nblocks", "seq",
-    "pb_token", "pb_count",
+    "pb_token", "pb_count", "epoch", "crc",
 )
 assert len(FIELDS) == HDR_WORDS
 
@@ -109,6 +123,8 @@ class Header:
     seq: jnp.ndarray
     pb_token: jnp.ndarray
     pb_count: jnp.ndarray
+    epoch: jnp.ndarray
+    crc: jnp.ndarray
 
     @property
     def msg_class(self):
@@ -248,3 +264,42 @@ def reply_for(hdr: Header) -> jnp.ndarray:
 
 def is_nop(hdr: Header):
     return hdr.msg_class == NOP
+
+
+# --------------------------------------------------------------------------
+# packet integrity: the crc header word (lossy-transport seal)
+# --------------------------------------------------------------------------
+
+_I_CRC = FIELDS.index("crc")
+
+
+def packet_crc(pkt: jnp.ndarray) -> jnp.ndarray:
+    """Integrity word for a fused packet: XOR-fold of every lane, each
+    rotated left by a lane-dependent amount in [1, 31].
+
+    The rotation makes the fold position-sensitive AND gives the
+    single-bit-flip guarantee: a flip of bit ``b`` in lane ``i`` toggles
+    exactly one bit of the fold (bit ``(b + rot_i) mod 32``), so the
+    computed word always diverges from the stored one.  The crc lane
+    itself is excluded from the fold; an all-zero NOP packet folds to 0.
+
+    Accepts ``(..., W)`` packets; returns the ``(...,)`` int32 fold.
+    """
+    u = lax.bitcast_convert_type(pkt.astype(jnp.int32), jnp.uint32)
+    lanes = jnp.arange(pkt.shape[-1], dtype=jnp.uint32)
+    rot = (lanes % 31) + 1                       # in [1, 31]: both shifts legal
+    rolled = (u << rot) | (u >> (jnp.uint32(32) - rot))
+    rolled = jnp.where(lanes == _I_CRC, jnp.uint32(0), rolled)
+    fold = lax.reduce(rolled, jnp.uint32(0), lax.bitwise_xor, (pkt.ndim - 1,))
+    return lax.bitcast_convert_type(fold, jnp.int32)
+
+
+def seal_packet(pkt: jnp.ndarray) -> jnp.ndarray:
+    """Stamp the crc header word of a fused ``(..., W)`` packet (or
+    segment stack).  Idempotent: the crc lane is excluded from the fold."""
+    return pkt.at[..., _I_CRC].set(packet_crc(pkt))
+
+
+def packet_crc_ok(pkt: jnp.ndarray) -> jnp.ndarray:
+    """Per-packet bool: does the stored crc word match the fold?"""
+    return pkt[..., _I_CRC] == packet_crc(pkt)

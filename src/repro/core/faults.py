@@ -1,0 +1,119 @@
+"""Deterministic, seedable packet-fault injection at the ppermute boundary.
+
+The paper's middleware runs over transports that are allowed to lose
+things (TCP / UDP / raw Ethernet, Sec. II-B2); the collectivized wire in
+this repo emulates the link with ``lax.ppermute``, which never loses
+anything.  This module injects the losses back — *inside traced code*,
+so the fault process composes with the scanned ingress, jit, and scan
+exactly like real loss would, and two traces of the same program from
+the same state see the *same* faults (the draws are a pure function of
+``(seed, receiver id, token, epoch, round, direction)``, never of host
+RNG state or trace order).
+
+Faults are applied on the receiver side, to the ``(nseg, W)`` packet
+stack that just came out of the collective:
+
+* **drop** — the row is zeroed.  An all-zero row is the wire's explicit
+  NOP, so a dropped packet is simply never seen, like a lost datagram.
+* **corrupt** — one uniformly chosen bit of the row (header or payload)
+  is flipped.  The CRC seal (:func:`repro.core.am.packet_crc_ok`)
+  catches every single-bit flip; the receiver NOPs the row and latches
+  ``ERR_CRC``, so corruption degenerates to drop + a sticky error bit.
+* **duplicate** — the row is delivered twice.  :func:`deliver` returns a
+  ``(2 * nseg, W)`` stack whose second half holds the duplicated rows
+  (NOP elsewhere); the dedup ledger makes redelivery idempotent.
+
+Only rows that are live on the wire (non-NOP type word) can fault — a
+NOP row is the *absence* of a packet, there is nothing to lose.  Fault
+probabilities are per-receiver traced scalars so one collective can mix
+lossless (LOCAL/ICI) and lossy (DCN) links: receivers on a lossless
+link pass probability 0 and the draws compare false everywhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import am
+
+# direction salts: data stack vs the (reverse-link) ack
+DIR_DATA = 0
+DIR_REPLY = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Per-link-class fault process: independent per-packet Bernoulli
+    draws for drop / duplicate / corrupt, derived from ``seed``."""
+
+    drop: float = 0.0
+    dup: float = 0.0
+    corrupt: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        for name in ("drop", "dup", "corrupt"):
+            p = getattr(self, name)
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"FaultModel.{name} must be in [0, 1], "
+                                 f"got {p}")
+
+    @property
+    def lossless(self) -> bool:
+        return self.drop == 0.0 and self.dup == 0.0 and self.corrupt == 0.0
+
+
+def fault_key(model: FaultModel, receiver, token, epoch, rnd, direction):
+    """The deterministic draw key.  Every argument may be traced; the
+    chain of ``fold_in`` decorrelates receivers, messages (token +
+    send epoch), retransmit rounds, and the data/reply directions while
+    keeping the whole process reproducible across traces."""
+    key = jax.random.PRNGKey(model.seed)
+    for salt in (receiver, token, epoch, rnd, direction):
+        key = jax.random.fold_in(key, jnp.asarray(salt, jnp.int32))
+    return key
+
+
+def inject(rows: jnp.ndarray, key, drop, dup, corrupt):
+    """Apply one round of faults to a received ``(nseg, W)`` int32 stack.
+
+    ``drop``/``dup``/``corrupt`` are per-receiver scalar probabilities
+    (traced OK — pass 0.0 on lossless links).  Returns
+    ``(rows_after, dup_mask)``: corrupt flips one uniform bit of the
+    row, drop zeroes it (corrupt-then-drop: a packet both corrupted and
+    lost is just lost), ``dup_mask`` marks surviving rows delivered
+    twice.  Only live (non-NOP) rows fault.
+    """
+    nseg, width = rows.shape
+    live = rows[:, am.FIELDS.index("type")] != 0
+    kd, ku, kc, kb = jax.random.split(key, 4)
+    dropm = live & (jax.random.uniform(kd, (nseg,)) < drop)
+    dupm = live & (jax.random.uniform(ku, (nseg,)) < dup)
+    corm = live & (jax.random.uniform(kc, (nseg,)) < corrupt)
+
+    # corrupt: flip bit (b % 32) of lane (b // 32), b uniform on the row
+    bit = jax.random.randint(kb, (nseg,), 0, width * 32)
+    lane = jnp.arange(width, dtype=jnp.int32)[None, :]
+    flip = jnp.where(lane == (bit // 32)[:, None],
+                     jnp.uint32(1) << (bit % 32).astype(jnp.uint32)[:, None],
+                     jnp.uint32(0))
+    u = lax.bitcast_convert_type(rows, jnp.uint32)
+    u = jnp.where(corm[:, None], u ^ flip, u)
+    rows = lax.bitcast_convert_type(u, jnp.int32)
+
+    rows = jnp.where(dropm[:, None], 0, rows)
+    return rows, dupm & ~dropm
+
+
+def deliver(rows: jnp.ndarray, key, drop, dup, corrupt):
+    """Full receiver-side delivery: fault the stack and materialise
+    duplicates.  Returns a ``(2 * nseg, W)`` stack — faulted rows first,
+    then the duplicated rows (NOP where no duplicate fired) — ready for
+    a dedup-gated scanned ingress."""
+    faulted, dupm = inject(rows, key, drop, dup, corrupt)
+    dups = jnp.where(dupm[:, None], faulted, 0)
+    return jnp.concatenate([faulted, dups], axis=0)

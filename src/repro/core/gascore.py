@@ -116,11 +116,16 @@ def ingress_long(ctx: ShoalContext, state: PgasState, hdr: am.Header,
 
 
 def _ingress_long_padded(ctx: ShoalContext, state: PgasState, hdr: am.Header,
-                         payload: jnp.ndarray, packet_words: int) -> PgasState:
+                         payload: jnp.ndarray, packet_words: int,
+                         gate=None) -> PgasState:
     """:func:`ingress_long` body over a state whose segment already has
     the packet-width pad (see :func:`_pad_segment`) — so a batched scan
-    pads once outside the loop, not once per segment."""
+    pads once outside the loop, not once per segment.  ``gate`` further
+    restricts application (the reliable path passes its dedup verdict:
+    already-seen rows must not re-apply)."""
     active = hdr.msg_class == am.LONG
+    if gate is not None:
+        active = active & gate
     addr = jnp.clip(hdr.dst_addr, 0, ctx.segment_words)
     region = lax.dynamic_slice(state.segment, (addr,), (packet_words,))
     new_region = ctx.handlers.dispatch(hdr.handler, region, payload)
@@ -433,13 +438,91 @@ def ingress_reply(state: PgasState, hdr: am.Header) -> PgasState:
     return dataclasses_replace(state, credits=credits)
 
 
+def ingress_reliable_stack(ctx: ShoalContext, state: PgasState,
+                           hdr_rows: jnp.ndarray, pay_rows: jnp.ndarray,
+                           packet_words: int, *, dedup: bool = True):
+    """Dedup-gated Long-stack ingress for the lossy-transport path.
+
+    Rows arrive out of a faulted exchange (drops already NOPed,
+    CRC-failed rows already NOPed, duplicates materialised as extra
+    rows — see :func:`repro.core.faults.deliver`), possibly REDELIVERED
+    by a sender retransmitting after a lost ack.  The redelivery ledger
+    makes application idempotent, keyed on (token, epoch, seq):
+
+    * a row whose epoch is <= the last *completed* epoch on its token is
+      stale — not applied, but a stale FINAL row still re-acks (the
+      data landed earlier; it is the ack that keeps dying);
+    * an in-flight row applies only if its segment bit is not yet in
+      ``dedup_seen[token]``, then sets the bit;
+    * when the final (non-async) row finds the arrival mask complete
+      (bits 0..seg_final all set), the message completes:
+      ``dedup_epoch[token]`` latches the epoch and the mask DRAINS TO
+      ZERO — a quiescent receiver holds no ledger residue.
+
+    One message per token may be in flight at a time (epochs on a token
+    are totally ordered by the sender's ``send_epoch`` counter); the
+    reliable put in :mod:`repro.core.ops` serialises this.  Segment
+    stacks are limited to 31 rows so the arrival mask fits an int32.
+
+    ``dedup=False`` keeps the CRC/drop handling but applies every
+    delivered row unconditionally and acks every final row — the unsafe
+    mode shoal-lint rule R5 exists to flag (a retransmitted H_ADD
+    double-accumulates, a duplicated final row double-acks).
+
+    Returns ``(state, ack_hdr)`` where ``ack_hdr`` is the reply header
+    owed this round (NOP when no final row completed or re-acked).
+    """
+    def body(carry, row):
+        st, ack = carry
+        h_raw, p = row
+        h = am.decode(h_raw)
+        active = h.msg_class == am.LONG
+        tok = jnp.clip(h.token, 0, hd.NUM_TOKENS - 1)
+        seg_i = jnp.clip(h.seq // packet_words, 0, 30)
+        bit = jnp.left_shift(jnp.int32(1), seg_i)
+        is_final = active & ~h.flag(am.FLAG_ASYNC) & ~h.flag(am.FLAG_REPLY)
+
+        if dedup:
+            done = st.dedup_epoch[tok]
+            stale = active & (h.epoch <= done)
+            tracked = st.dedup_inflight[tok] == h.epoch
+            seen = jnp.where(tracked, st.dedup_seen[tok], 0)
+            fresh = active & ~stale & ((seen & bit) == 0)
+            seen2 = jnp.where(active & ~stale, seen | bit, seen)
+            # complete <=> final row present and bits 0..seg_i all set
+            # (segments are contiguous, the final row has the top seq)
+            complete = is_final & ~stale \
+                & (seen2 == jnp.left_shift(bit, 1) - 1)
+            track = active & ~stale
+            st = dataclasses_replace(
+                st,
+                dedup_epoch=st.dedup_epoch.at[tok].set(
+                    jnp.where(complete, h.epoch, done)),
+                dedup_inflight=st.dedup_inflight.at[tok].set(
+                    jnp.where(track, h.epoch, st.dedup_inflight[tok])),
+                dedup_seen=st.dedup_seen.at[tok].set(
+                    jnp.where(complete, 0,
+                              jnp.where(track, seen2, st.dedup_seen[tok]))))
+            ack_now = complete | (stale & is_final)
+        else:
+            fresh = active
+            ack_now = is_final
+
+        st = _ingress_long_padded(ctx, st, h, p, packet_words, gate=fresh)
+        ack = jnp.where(ack_now, am.reply_for(h), ack)
+        return (st, ack), ()
+
+    state = dataclasses_replace(
+        state, segment=_pad_segment(state.segment, packet_words))
+    (state, ack_hdr), _ = lax.scan(
+        body, (state, jnp.zeros((am.HDR_WORDS,), jnp.int32)),
+        (hdr_rows, pay_rows))
+    return dataclasses_replace(
+        state, segment=state.segment[:ctx.segment_words]), ack_hdr
+
+
 def dataclasses_replace(state: PgasState, **kw) -> PgasState:
     """dataclasses.replace for the registered-dataclass pytree."""
-    fields = dict(
-        segment=state.segment, credits=state.credits,
-        barrier_epoch=state.barrier_epoch, rx_words=state.rx_words,
-        tx_words=state.tx_words, error=state.error,
-        deferred_acks=state.deferred_acks,
-    )
-    fields.update(kw)
-    return PgasState(**fields)
+    import dataclasses as _dc
+
+    return _dc.replace(state, **kw)

@@ -32,13 +32,17 @@ and earns ONE credit per message, not one per packet.
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.analysis import trace as _lint
 from repro.core import am
+from repro.core import faults as flt
 from repro.core import gascore as gc
 from repro.core import handlers as hd
-from repro.core.state import ERR_WAIT_UNDERFLOW, PgasState, ShoalContext
+from repro.core.state import (ERR_CRC, ERR_RETRY_EXHAUSTED,
+                              ERR_WAIT_UNDERFLOW, PgasState, ShoalContext)
+from repro.runtime.transport import is_lossy as _transport_is_lossy
 
 Pattern = list[tuple[int, int]]
 
@@ -211,6 +215,7 @@ _I_TYPE = am.FIELDS.index("type")
 _I_TOKEN = am.FIELDS.index("token")
 _I_PB_TOKEN = am.FIELDS.index("pb_token")
 _I_PB_COUNT = am.FIELDS.index("pb_count")
+_I_EPOCH = am.FIELDS.index("epoch")
 
 
 def _attach_piggyback(ctx: ShoalContext, state: PgasState, pattern: Pattern,
@@ -234,6 +239,132 @@ def _attach_piggyback(ctx: ShoalContext, state: PgasState, pattern: Pattern,
 
 
 # --------------------------------------------------------------------------
+# lossy-transport plumbing: sealed + faulted exchanges, bounded retransmit
+# --------------------------------------------------------------------------
+
+def _require_lossless(op: str, ctx: ShoalContext) -> None:
+    """Ops without a reliability protocol refuse lossy transports at
+    trace time rather than silently pretending the link is perfect
+    (the plain :func:`_exchange` path injects no faults)."""
+    if _transport_is_lossy(ctx.transport):
+        raise NotImplementedError(
+            f"{op}: no retransmit/dedup protocol on a lossy transport — "
+            "only put_long (and wait_replies) defend against loss; use a "
+            "lossless transport or route this op over put_long")
+
+
+def _lossy_recv_probs(ctx: ShoalContext, pattern: Pattern):
+    """Per-receiver (drop, dup, corrupt) scalars for one traversal of
+    ``pattern``: each receiver's incoming link is classified statically
+    (LOCAL/ICI links stay lossless even inside a lossy collective)."""
+    tbl = np.zeros((ctx.num_kernels, 3), np.float32)
+    for s, d in pattern:
+        tbl[d] = ctx.transport.probs_for(s, d)
+    row = jnp.asarray(tbl)[ctx.my_id()]
+    return row[0], row[1], row[2]
+
+
+def _lossy_exchange(ctx: ShoalContext, state: PgasState, pattern: Pattern,
+                    pkt: jnp.ndarray, dtype, *, token, epoch, rnd: int,
+                    direction: int):
+    """One sealed link traversal over a lossy transport.
+
+    ``pkt`` is the fused ``(nseg, HDR_WORDS + W)`` int32 stack (``W`` may
+    be 0 for header-only acks).  The stack is CRC-sealed, shipped,
+    faulted receiver-side (deterministically — see
+    :mod:`repro.core.faults`), CRC-checked, and rows failing the check
+    are NOPed with ``ERR_CRC`` latched (a corrupt packet degenerates to
+    a drop the retransmit loop recovers from).  Returns
+    ``(state, hdr_rows, pay_rows)`` where the stacks are ``(2 * nseg,
+    ...)`` with duplicate deliveries materialised in the second half.
+    """
+    pkt = am.seal_packet(pkt)
+    remote = [(s, d) for (s, d) in pattern if s != d]
+    pkt_r = lax.ppermute(pkt, ctx.axes, pattern) if remote else pkt
+    drop, dup, corrupt = _lossy_recv_probs(ctx, pattern)
+    key = flt.fault_key(ctx.transport.faults, ctx.my_id(), token, epoch,
+                        rnd, direction)
+    delivered = flt.deliver(pkt_r, key, drop, dup, corrupt)
+    ok = am.packet_crc_ok(delivered)
+    state = gc.dataclasses_replace(
+        state, error=state.error | jnp.where(jnp.any(~ok), ERR_CRC, 0)
+        .astype(jnp.int32))
+    delivered = jnp.where(ok[:, None], delivered, 0)
+    hdr_rows = delivered[:, :am.HDR_WORDS]
+    pay_rows = am.from_wire(delivered[:, am.HDR_WORDS:], dtype)
+    return state, hdr_rows, pay_rows
+
+
+def _put_long_reliable(ctx: ShoalContext, state: PgasState, pattern: Pattern,
+                       hdrs: jnp.ndarray, buf: jnp.ndarray, W: int,
+                       nwords: int, token, *, acked: bool,
+                       dedup: bool) -> PgasState:
+    """Bounded-retransmit delivery of one sealed Long packet stack.
+
+    Senders re-ship the (NOP-masked, so only still-pending senders pay
+    wire words) stack until the receiver's ack survives the reverse
+    link, up to ``max_retries`` extra rounds — the collectivized form of
+    host-side retransmit with backoff: every round IS a full round-trip
+    later, so waiting happens by construction, and the per-kernel
+    ``retransmits`` counter records the rounds actually re-sent in (the
+    dynamic cost; compiled collective counts are static).  Receivers run
+    the dedup-gated ingress so redelivery is idempotent; a completed (or
+    stale-redelivered final) row re-acks, covering the lost-ack case.
+    On success the sender grants itself the message's ONE credit on
+    ``token`` (the protocol consumed the wire ack); on exhaustion it
+    latches ``ERR_RETRY_EXHAUSTED`` instead and the credit never
+    appears — ``wait_replies(..., timeout=True)`` is the graceful way
+    to observe that.
+    """
+    tok_c = jnp.clip(jnp.asarray(token, jnp.int32), 0, hd.NUM_TOKENS - 1)
+    sender = _is_sender(ctx, pattern)
+    epoch = state.send_epoch[tok_c] + 1
+    state = gc.dataclasses_replace(
+        state, send_epoch=state.send_epoch.at[tok_c].add(
+            sender.astype(jnp.int32)))
+    hdrs = hdrs.at[:, _I_EPOCH].set(
+        jnp.where(hdrs[:, _I_TYPE] != 0, epoch, 0))
+    attempts = 1 + (ctx.transport.max_retries if acked else 0)
+    pending = sender
+    # tx under loss counts FULL wire cost (headers + payload per data
+    # round, header-only acks) so goodput = payload / tx_words is honest
+    wire = am.wire_words(buf.dtype, nwords) + hdrs.shape[0] * am.HDR_WORDS
+    for rnd in range(attempts):
+        if rnd:
+            state = gc.dataclasses_replace(
+                state, retransmits=state.retransmits
+                + pending.astype(jnp.int32))
+        rows = jnp.where(pending, hdrs, 0)
+        pay = jnp.where(pending, buf, jnp.zeros_like(buf))
+        state = gc.dataclasses_replace(
+            state, tx_words=state.tx_words + jnp.where(pending, wire, 0))
+        state, hdr_r, pay_r = _lossy_exchange(
+            ctx, state, pattern, am.pack_packet(rows, pay), buf.dtype,
+            token=tok_c, epoch=epoch, rnd=rnd, direction=flt.DIR_DATA)
+        state, ack_hdr = gc.ingress_reliable_stack(ctx, state, hdr_r, pay_r,
+                                                   W, dedup=dedup)
+        if not acked:
+            return state
+        state = gc.dataclasses_replace(
+            state, tx_words=state.tx_words + jnp.where(
+                ack_hdr[_I_TYPE] != 0, am.HDR_WORDS, 0))
+        state, rep_r, _ = _lossy_exchange(
+            ctx, state, _reverse(pattern), ack_hdr[None, :], jnp.int32,
+            token=tok_c, epoch=epoch, rnd=rnd, direction=flt.DIR_REPLY)
+        t_col = rep_r[:, _I_TYPE]
+        got = jnp.any(((t_col & am._CLASS_MASK) == am.SHORT)
+                      & ((t_col & am.FLAG_REPLY) != 0)
+                      & (rep_r[:, _I_TOKEN] == tok_c))
+        pending = pending & ~got
+    delivered = sender & ~pending
+    return gc.dataclasses_replace(
+        state,
+        credits=state.credits.at[tok_c].add(delivered.astype(jnp.int32)),
+        error=state.error | jnp.where(pending, ERR_RETRY_EXHAUSTED, 0)
+        .astype(jnp.int32))
+
+
+# --------------------------------------------------------------------------
 # Short AMs
 # --------------------------------------------------------------------------
 
@@ -245,6 +376,7 @@ def put_short(ctx: ShoalContext, state: PgasState, pattern: Pattern, *,
     The handler runs on the destination's credit word ``token`` with
     ``arg``; the default (H_ADD, 1) is a counting semaphore.
     """
+    _require_lossless("put_short", ctx)
     h_s, a_s, t_s = (_lint.static_int(handler), _lint.static_int(arg),
                      _lint.static_int(token))
     grants = ((t_s, a_s),) if (h_s == hd.H_ADD and a_s is not None
@@ -286,6 +418,7 @@ def put_medium(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray | None,
     packet stack: a single collective plus (if acked) a single
     coalesced reply.
     """
+    _require_lossless("put_medium", ctx)
     nwords = _resolve_nwords(payload, from_segment_addr, nwords, "put_medium")
     fifo = from_segment_addr is None
     tag = _lint.emit(
@@ -328,7 +461,8 @@ def put_long(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray | None,
              pattern: Pattern, dst_addr, *, handler=hd.H_WRITE, token=0,
              asynchronous: bool = False, from_segment_addr=None,
              nwords: int | None = None, reply_via=None,
-             defer_ack: bool = False, piggyback_token=None) -> PgasState:
+             defer_ack: bool = False, piggyback_token=None,
+             dedup: bool = True) -> PgasState:
     """Long AM: one-sided put into the destination kernel's segment at
     ``dst_addr``, applied through ``handler`` (H_WRITE = plain put,
     H_ADD = remote accumulate, ...).  FIFO variant when ``payload`` is
@@ -345,25 +479,51 @@ def put_long(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray | None,
     ``piggyback_token=t`` loads THIS packet's piggyback lane with the
     sender's ledgered acks for ``t`` (acks this kernel owes for puts it
     *received* over the link this packet now travels in reverse).
+
+    On a lossy transport (:class:`repro.runtime.transport.LossyTransport`
+    with a non-zero fault model) the put runs the reliability protocol
+    instead: packets are CRC-sealed and epoch-stamped, receivers dedup
+    redelivery, and (if acked) senders retransmit up to ``max_retries``
+    rounds before latching ``ERR_RETRY_EXHAUSTED`` — see
+    :func:`_put_long_reliable`.  ``dedup=False`` disables the receiver
+    ledger (shoal-lint rule R5 flags that combination).  The ack-lane
+    machinery (defer_ack / piggyback / reply_via) presumes a lossless
+    reply and is rejected on lossy transports.
     """
     nwords = _resolve_nwords(payload, from_segment_addr, nwords, "put_long")
     fifo = from_segment_addr is None
     _check_ack_lanes("put_long", ctx, asynchronous=asynchronous,
                      defer_ack=defer_ack, piggyback_token=piggyback_token,
                      reply_via=reply_via)
+    lossy = _transport_is_lossy(ctx.transport)
+    acked = ctx.transport.acked and not asynchronous
+    if lossy and (defer_ack or piggyback_token is not None
+                  or reply_via is not None):
+        raise NotImplementedError(
+            "put_long: deferred/piggybacked acks assume a lossless reply "
+            "path and cannot ride a lossy transport (a dropped piggyback "
+            "lane would strand the ledger); use plain acked puts")
     tag = _lint.emit(
         "put_long", pattern,
         writes=(_lint.Interval(_lint.static_int(dst_addr), nwords),),
         token=_lint.static_int(token),
-        acked=ctx.transport.acked and not asynchronous,
+        acked=acked,
         asynchronous=asynchronous, deferred_reply=reply_via is not None,
         defer_ack=defer_ack,
         piggyback_token=(None if piggyback_token is None
                          else int(piggyback_token)),
-        handler=_lint.static_int(handler), segment_words=ctx.segment_words)
+        handler=_lint.static_int(handler), segment_words=ctx.segment_words,
+        lossy=lossy,
+        retries=(ctx.transport.max_retries if lossy and acked else 0),
+        dedup=dedup if lossy else True)
     with _lint.scope(tag):
         segs = _segments(nwords, ctx.transport.max_packet_words)
         nseg, W = len(segs), segs[0][1]
+        if lossy and nseg > 31:
+            raise NotImplementedError(
+                f"put_long: {nseg} segments > 31 — the dedup ledger's "
+                "arrival bitmask is one int32 per token; raise the MTU or "
+                "split the message")
         offs = jnp.asarray([o for o, _ in segs], jnp.int32)
         ws = jnp.asarray([w for _, w in segs], jnp.int32)
         hdrs = am.encode_batch(
@@ -379,6 +539,15 @@ def put_long(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray | None,
                                             piggyback_token)
         hdrs = _mask_nonparticipants(ctx, pattern, hdrs)
         buf = gc.egress_batch(ctx, state, hdrs, payload if fifo else None, W)
+        if lossy:
+            if not am.wire_dtype_ok(buf.dtype):
+                raise NotImplementedError(
+                    "put_long: the lossy-transport seal covers the fused "
+                    "int32 packet; sub-32-bit payloads use the split "
+                    "fallback and have no integrity protection yet")
+            return _put_long_reliable(ctx, state, pattern, hdrs, buf, W,
+                                      nwords, token, acked=acked,
+                                      dedup=dedup)
         state = gc.dataclasses_replace(
             state, tx_words=state.tx_words +
             jnp.where(_is_sender(ctx, pattern),
@@ -496,6 +665,7 @@ def put_long_multi(ctx: ShoalContext, state: PgasState, items, *,
     """
     if not items:
         raise ValueError("put_long_multi: empty item list")
+    _require_lossless("put_long_multi", ctx)
     k = len(items)
     toks = list(tokens) if tokens is not None else [token] * k
     if len(toks) != k:
@@ -625,6 +795,7 @@ def drain_deferred_acks(ctx: ShoalContext, state: PgasState,
     still owed.  The count rides in the handler-arg word (dynamic), so
     one drain balances any number of outstanding puts.
     """
+    _require_lossless("drain_deferred_acks", ctx)
     t_s = _lint.static_int(token)
     if t_s is None:
         raise ValueError("drain_deferred_acks: token must be trace-time "
@@ -681,6 +852,7 @@ def put_long_strided(ctx: ShoalContext, state: PgasState, payload: jnp.ndarray,
     last-writer-wins ordering; a traced stride is conservatively treated
     as aliasing.  ``overlap`` overrides the detection either way.
     """
+    _require_lossless("put_long_strided", ctx)
     ordered = (_strides_may_overlap(stride, blk_words, nblocks)
                if overlap is None else bool(overlap))
     nwords = blk_words * nblocks
@@ -740,6 +912,7 @@ def put_long_vectored(ctx: ShoalContext, state: PgasState,
     packet as an extra int32 section (``header ++ addrs ++ payload``),
     so the whole message is a single collective; the receiver scatters.
     Block sizes are static; addresses may be traced."""
+    _require_lossless("put_long_vectored", ctx)
     try:
         n_addrs = len(dst_addrs)
     except TypeError:
@@ -806,7 +979,7 @@ def put_long_vectored(ctx: ShoalContext, state: PgasState,
                 dst_addr=addrs_r[i], src_addr=h.src_addr, handler=h.handler,
                 token=h.token, stride=h.stride, blk_words=h.blk_words,
                 nblocks=h.nblocks, seq=h.seq, pb_token=h.pb_token,
-                pb_count=h.pb_count)
+                pb_count=h.pb_count, epoch=h.epoch, crc=h.crc)
             state = gc.ingress_long(ctx, state, sub_hdr,
                                     lax.dynamic_slice(pay_r, (off,), (w,)), w)
             off += w
@@ -827,6 +1000,7 @@ def get_medium(ctx: ShoalContext, state: PgasState, pattern: Pattern,
     bump ONCE per message, on the final segment).  >MTU gets batch all
     request headers into one collective and the whole response into a
     second: 2 link traversals regardless of segment count."""
+    _require_lossless("get_medium", ctx)
     tag = _lint.emit(
         "get_medium", pattern,
         reads=(_lint.Interval(_lint.static_int(src_addr), int(nwords)),),
@@ -857,6 +1031,7 @@ def get_long(ctx: ShoalContext, state: PgasState, pattern: Pattern,
     """Long get: fetch remote segment words into the *local* segment at
     ``dst_addr`` (one-sided read).  Same batched 2-traversal wire plan
     as :func:`get_medium`; one credit per message."""
+    _require_lossless("get_long", ctx)
     tag = _lint.emit(
         "get_long", pattern,
         reads=(_lint.Interval(_lint.static_int(src_addr), int(nwords)),),
@@ -902,7 +1077,8 @@ def barrier(ctx: ShoalContext, state: PgasState) -> PgasState:
         return gc.dataclasses_replace(state, barrier_epoch=epoch)
 
 
-def wait_replies(ctx: ShoalContext, state: PgasState, token, n) -> PgasState:
+def wait_replies(ctx: ShoalContext, state: PgasState, token, n, *,
+                 timeout: bool = False) -> PgasState:
     """Wait for ``n`` replies on ``token`` then consume them.
 
     Replies coalesce across >MTU segmentation, so ``n`` counts
@@ -913,12 +1089,26 @@ def wait_replies(ctx: ShoalContext, state: PgasState, token, n) -> PgasState:
     assert on it).  On the host, :func:`repro.core.state.raise_on_error`
     converts the bit into a named :class:`~repro.core.state.
     WaitUnderflowError` carrying the offending token id(s).
+
+    ``timeout=True`` is the lossy-transport path: a reliable put whose
+    retransmits were exhausted never granted its credit, so a plain
+    wait would latch ``ERR_WAIT_UNDERFLOW`` forever on top of the
+    already-latched ``ERR_RETRY_EXHAUSTED``.  The timeout path instead
+    drains ``min(have, n)`` — the waits that *did* complete — and latches
+    nothing: the threaded original's bounded-timeout wait, where giving
+    up is a normal outcome the caller inspects (via the error word)
+    rather than a schedule bug.
     """
     tag = _lint.emit("wait_replies", [], token=_lint.static_int(token),
-                     wait_n=_lint.static_int(n))
+                     wait_n=_lint.static_int(n), timeout=timeout)
     with _lint.scope(tag):
         token = jnp.clip(jnp.asarray(token, jnp.int32), 0, hd.NUM_TOKENS - 1)
         have = state.credits[token]
+        if timeout:
+            take = jnp.minimum(have, jnp.asarray(n, jnp.int32))
+            take = jnp.maximum(take, 0)
+            credits = hd.drain_credits(state.credits, token, take)
+            return gc.dataclasses_replace(state, credits=credits)
         err = jnp.where(have < n, ERR_WAIT_UNDERFLOW, 0).astype(jnp.int32)
         credits = hd.drain_credits(state.credits, token, n)
         return gc.dataclasses_replace(state, credits=credits,

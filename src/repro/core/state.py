@@ -45,6 +45,22 @@ class PgasState:
     # a reply collective; the next packet this kernel sends over the
     # reverse link carries the count home in its pb_token/pb_count lane.
 
+    # -- lossy-transport reliability state (PR 10) ----------------------
+    # send_epoch stamps outgoing messages with a per-(sender, token)
+    # sequence number; the three dedup_* arrays are the receiver's
+    # redelivery ledger: dedup_epoch[t] is the last *completed* epoch on
+    # token t, dedup_inflight[t] the epoch the partial-arrival bitmask
+    # dedup_seen[t] (bit i = segment i arrived) belongs to.  When the
+    # final segment completes the mask, dedup_epoch latches and the mask
+    # drains back to zero.  retransmits counts retry rounds this kernel
+    # actually re-sent in (the dynamic cost of loss — compiled CP counts
+    # are static, this is not).
+    send_epoch: jnp.ndarray       # (NUM_TOKENS,) int32 per-token msg counter
+    dedup_epoch: jnp.ndarray      # (NUM_TOKENS,) int32 last completed epoch
+    dedup_inflight: jnp.ndarray   # (NUM_TOKENS,) int32 epoch of dedup_seen
+    dedup_seen: jnp.ndarray       # (NUM_TOKENS,) int32 segment-arrival bitmask
+    retransmits: jnp.ndarray      # () int32 retry rounds this kernel sent in
+
     @staticmethod
     def make(segment_words: int, dtype=jnp.float32) -> "PgasState":
         return PgasState(
@@ -55,14 +71,31 @@ class PgasState:
             tx_words=jnp.zeros((), jnp.int32),
             error=jnp.zeros((), jnp.int32),
             deferred_acks=jnp.zeros((hd.NUM_TOKENS,), jnp.int32),
+            send_epoch=jnp.zeros((hd.NUM_TOKENS,), jnp.int32),
+            dedup_epoch=jnp.zeros((hd.NUM_TOKENS,), jnp.int32),
+            dedup_inflight=jnp.zeros((hd.NUM_TOKENS,), jnp.int32),
+            dedup_seen=jnp.zeros((hd.NUM_TOKENS,), jnp.int32),
+            retransmits=jnp.zeros((), jnp.int32),
         )
 
 
-# error bits
-ERR_WAIT_UNDERFLOW = 1  # wait_replies saw fewer credits than expected
+# -- sticky error bits + host-side decode registry ---------------------------
+ERR_WAIT_UNDERFLOW = 1    # wait_replies saw fewer credits than expected
+ERR_CRC = 2               # a received packet failed its CRC seal
+ERR_RETRY_EXHAUSTED = 4   # a reliable put ran out of retransmit rounds
 
 
-class WaitUnderflowError(RuntimeError):
+class ShoalError(RuntimeError):
+    """Base of host-side errors decoded from the sticky device error
+    word.  ``kernels`` names the kernels that latched the bit (empty
+    when the state was already reduced to a single error word)."""
+
+    def __init__(self, message: str, kernels=()):
+        self.kernels = tuple(int(k) for k in kernels)
+        super().__init__(message)
+
+
+class WaitUnderflowError(ShoalError):
     """A ``wait_replies`` drained more credits than the schedule issued.
 
     The device-side error word is sticky (kernels cannot raise), so this
@@ -74,38 +107,109 @@ class WaitUnderflowError(RuntimeError):
 
     def __init__(self, tokens, kernels, where: str = ""):
         self.tokens = tuple(int(t) for t in tokens)
-        self.kernels = tuple(int(k) for k in kernels)
         at = f" in {where}" if where else ""
         tok = (f"token(s) {list(self.tokens)}" if self.tokens
                else "an unidentified token (counters were rebalanced)")
-        ker = (f" on kernel(s) {list(self.kernels)}" if self.kernels
+        kernels = tuple(int(k) for k in kernels)
+        ker = (f" on kernel(s) {list(kernels)}" if kernels
                else "")
         super().__init__(
             f"ERR_WAIT_UNDERFLOW{at}: wait_replies consumed more credits "
             f"than were issued on {tok}{ker} — the threaded original "
             "would hang here; shoal-lint rule R3 catches this schedule "
-            "at trace time (scripts/comm_lint.py)")
+            "at trace time (scripts/comm_lint.py)", kernels)
 
 
-def raise_on_error(state: PgasState, *, where: str = "") -> PgasState:
+class CrcError(ShoalError):
+    """A receiver saw a packet whose CRC seal failed (bit corruption on
+    a lossy link).  The row was NOPed — i.e. treated as a drop — so on
+    an acked transport the retransmit path recovers; the sticky bit is
+    the observability surface."""
+
+
+class RetryExhaustedError(ShoalError):
+    """A reliable put gave up after ``max_retries`` retransmissions
+    without seeing an ack.  The destination may or may not hold the
+    data (the ack, not the data, may be what kept dying); the sender's
+    credit was NOT granted.  `training/elastic.py` uses this bit to
+    drop the kernel out of the quorum mask."""
+
+
+def _build_wait_underflow(state, kernels, where):
+    import numpy as np
+
+    credits = np.asarray(jax.device_get(state.credits))
+    credits = credits.reshape(-1, hd.NUM_TOKENS)
+    # an over-drained wait leaves its token negative on the waiting kernel
+    tokens = np.nonzero((credits < 0).any(axis=0))[0]
+    return WaitUnderflowError(tokens, kernels, where=where)
+
+
+def _generic_builder(name, exc):
+    def build(state, kernels, where):
+        kernels = tuple(int(k) for k in kernels)
+        at = f" in {where}" if where else ""
+        ker = f" on kernel(s) {list(kernels)}" if kernels else ""
+        return exc(f"{name}{at}: sticky device error bit latched{ker} "
+                   "(see repro.core.state docs for semantics)", kernels)
+    return build
+
+
+# bit -> (name, exception class, builder(state, kernels, where) -> exc).
+# Future PRs extend via register_error_bit; raise_on_error decodes all
+# registered bits, lowest bit first.
+ERROR_BITS: dict[int, tuple[str, type, Any]] = {}
+
+
+def register_error_bit(bit: int, name: str, exc: type = ShoalError,
+                       builder=None) -> None:
+    """Register a sticky error bit so :func:`raise_on_error` can decode
+    and name it.  ``bit`` must be a fresh power of two."""
+    if bit <= 0 or bit & (bit - 1):
+        raise ValueError(f"error bit must be a power of two, got {bit}")
+    if bit in ERROR_BITS:
+        raise ValueError(f"error bit {bit} already registered "
+                         f"as {ERROR_BITS[bit][0]}")
+    ERROR_BITS[bit] = (name, exc, builder or _generic_builder(name, exc))
+
+
+register_error_bit(ERR_WAIT_UNDERFLOW, "ERR_WAIT_UNDERFLOW",
+                   WaitUnderflowError, _build_wait_underflow)
+register_error_bit(ERR_CRC, "ERR_CRC", CrcError)
+register_error_bit(ERR_RETRY_EXHAUSTED, "ERR_RETRY_EXHAUSTED",
+                   RetryExhaustedError)
+
+
+def error_names(err: int) -> tuple[str, ...]:
+    """Names of the registered bits set in an error word."""
+    return tuple(name for bit, (name, _, _) in sorted(ERROR_BITS.items())
+                 if err & bit)
+
+
+def raise_on_error(state: PgasState, *, where: str = "",
+                   ignore: int = 0) -> PgasState:
     """Host-side debug check: raise if any kernel latched an error bit.
 
     Call on a state fetched back to the host (after ``spmd`` execution).
     Accepts per-kernel ``(...,)`` or stacked global ``(kernels, ...)``
     leaves; returns ``state`` unchanged when clean so it can sit inline
-    in a host-side pipeline.
+    in a host-side pipeline.  Every bit in the registry is decoded to
+    its named exception class, lowest bit first; ``ignore`` masks bits
+    the caller expects (e.g. ``ignore=ERR_CRC`` under deliberate fault
+    injection).
     """
     import numpy as np
 
     err = np.asarray(jax.device_get(state.error)).reshape(-1)
-    if not (err & ERR_WAIT_UNDERFLOW).any():
-        return state
-    kernels = np.nonzero(err & ERR_WAIT_UNDERFLOW)[0] if err.size > 1 else ()
-    credits = np.asarray(jax.device_get(state.credits))
-    credits = credits.reshape(-1, hd.NUM_TOKENS)
-    # an over-drained wait leaves its token negative on the waiting kernel
-    tokens = np.nonzero((credits < 0).any(axis=0))[0]
-    raise WaitUnderflowError(tokens, kernels, where=where)
+    pending = int(np.bitwise_or.reduce(err)) & ~ignore if err.size else 0
+    for bit, (name, _, build) in sorted(ERROR_BITS.items()):
+        if pending & bit:
+            kernels = np.nonzero(err & bit)[0] if err.size > 1 else ()
+            raise build(state, kernels, where)
+    if pending:
+        raise ShoalError(f"unregistered error bit(s) 0x{pending:x}"
+                         + (f" in {where}" if where else ""))
+    return state
 
 
 @dataclasses.dataclass(frozen=True)

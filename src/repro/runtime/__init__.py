@@ -16,7 +16,8 @@ same three concerns exist and live here:
 """
 
 from repro.runtime.topology import ClusterSpec, make_mesh, make_cpu_mesh
-from repro.runtime.transport import (Transport, TCP, UDP, LinkClass,
+from repro.runtime.transport import (Transport, LossyTransport, TCP, UDP,
+                                     LinkClass, default_link_of, is_lossy,
                                      model_latency_s, model_throughput_Bps)
 from repro.runtime.router import Router
 
@@ -25,9 +26,12 @@ __all__ = [
     "make_mesh",
     "make_cpu_mesh",
     "Transport",
+    "LossyTransport",
     "TCP",
     "UDP",
     "LinkClass",
+    "default_link_of",
+    "is_lossy",
     "model_latency_s",
     "model_throughput_Bps",
     "Router",

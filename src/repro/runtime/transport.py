@@ -2,12 +2,26 @@
 
 The paper's middleware lets an application switch between TCP, UDP and
 raw Ethernet without source changes (Sec. II-B2), and its AM layer marks
-messages *asynchronous* to suppress the automatic reply (Sec. III-A).
-On a TPU pod the links are lossless, so the surviving distinction is:
+messages *asynchronous* to suppress the automatic reply (Sec. III-A):
 
 * ``TCP``  -> *acked* delivery: every AM triggers an automatic reply
   that bumps a credit counter at the source (2 link traversals).
 * ``UDP``  -> *async* delivery: fire-and-forget (1 link traversal).
+
+Links are NOT uniformly lossless.  Intra-chip (LOCAL) and intra-pod
+(ICI) traffic is reliable, but the DCN link class crosses a real
+data-center network where packets drop, duplicate, and bit-corrupt —
+and the paper's raw-Ethernet/UDP configurations never promised delivery
+in the first place.  :class:`LossyTransport` makes that explicit: it
+carries a seedable :class:`repro.core.faults.FaultModel` applied per
+link class at the ppermute boundary, and a retransmit bound.  On a
+lossy transport the op layer seals every packet with the header CRC
+word, stamps a send epoch, and drives acked puts through a bounded
+retransmit loop: a drop (or a CRC-failed corruption) suppresses the
+ack, the sender re-sends, and the receiver's dedup ledger keyed on
+(token, epoch, seq) makes redelivery idempotent.  Senders that exhaust
+``max_retries`` latch the sticky ``ERR_RETRY_EXHAUSTED`` error bit
+instead of hanging.
 
 A transport also carries the maximum packet size.  The paper inherits a
 9000-byte jumbo-frame limit from the hardware TCP core and leaves
@@ -24,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+from typing import Callable
 
 
 class LinkClass(enum.Enum):
@@ -68,11 +83,64 @@ TCP = Transport(name="tcp", acked=True)
 UDP = Transport(name="udp", acked=False)
 
 
+def default_link_of(src: int, dst: int) -> LinkClass:
+    """Pessimistic default placement: same kernel id = LOCAL, everything
+    else crosses the data-center network.  Meshes with a real topology
+    map can pass a custom classifier to :class:`LossyTransport`."""
+    return LinkClass.LOCAL if src == dst else LinkClass.DCN
+
+
+@dataclasses.dataclass(frozen=True)
+class LossyTransport(Transport):
+    """A transport whose lossy link classes drop/duplicate/corrupt.
+
+    ``faults`` is the seedable fault process applied to every link whose
+    :class:`LinkClass` is in ``lossy_links`` (default: only DCN —
+    LOCAL and ICI stay reliable); ``link_of(src, dst)`` classifies a
+    link at trace time.  On an *acked* lossy transport the op layer runs
+    reliable puts: CRC-sealed packets, receiver-side dedup, and up to
+    ``max_retries`` retransmissions driven by the missing ack before
+    latching ``ERR_RETRY_EXHAUSTED``.  On an async lossy transport
+    messages stay fire-and-forget — losses are simply losses, exactly
+    like the paper's UDP/raw-Ethernet configurations.
+    """
+
+    name: str = "lossy-tcp"
+    acked: bool = True
+    faults: "FaultModel" = None  # required; keyword-only in practice
+    lossy_links: tuple[LinkClass, ...] = (LinkClass.DCN,)
+    link_of: Callable[[int, int], LinkClass] = default_link_of
+    max_retries: int = 4
+
+    def __post_init__(self):
+        if self.faults is None:
+            raise ValueError("LossyTransport needs a FaultModel "
+                             "(use faults=FaultModel(...))")
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+
+    def link_is_lossy(self, src: int, dst: int) -> bool:
+        return self.link_of(src, dst) in self.lossy_links
+
+    def probs_for(self, src: int, dst: int) -> tuple[float, float, float]:
+        """(drop, dup, corrupt) probabilities of the (src, dst) link."""
+        if self.link_is_lossy(src, dst):
+            return (self.faults.drop, self.faults.dup, self.faults.corrupt)
+        return (0.0, 0.0, 0.0)
+
+
+def is_lossy(transport: Transport) -> bool:
+    """Does this transport carry a fault model the op layer must defend
+    against?  (A LossyTransport whose model is all-zero is lossless.)"""
+    return (isinstance(transport, LossyTransport)
+            and not transport.faults.lossless)
+
+
 def model_latency_s(
     transport: Transport,
     link: LinkClass,
     payload_bytes: int,
-    header_bytes: int = 48,
+    header_bytes: int = 64,
     hops: int | None = None,
 ) -> float:
     """Analytic end-to-end latency of one AM (plus reply if acked).
@@ -92,7 +160,7 @@ def model_latency_s(
 
 
 def model_throughput_Bps(
-    transport: Transport, link: LinkClass, payload_bytes: int, header_bytes: int = 48
+    transport: Transport, link: LinkClass, payload_bytes: int, header_bytes: int = 64
 ) -> float:
     """Sustained payload throughput of back-to-back pipelined AMs: the
     wire carries header+payload, only payload counts as goodput.  Replies

@@ -35,6 +35,7 @@ QUEUED = "queued"
 RUNNING = "running"
 DONE = "done"
 REJECTED = "rejected"
+TIMED_OUT = "timed_out"
 
 
 @dataclasses.dataclass
@@ -44,6 +45,7 @@ class Job:
     rid: int
     request: Request
     status: str = QUEUED
+    deadline: float | None = None     # absolute time.monotonic() cutoff
 
     @property
     def tokens(self) -> list[int]:
@@ -79,6 +81,7 @@ class ServeFrontend:
         self.admitted = 0
         self.rejected = 0
         self.completed = 0
+        self.expired = 0
         self.peak_queue_depth = 0
         self.busy_lanes: set[tuple] = set()
         self._chain_events(events)
@@ -127,28 +130,48 @@ class ServeFrontend:
     def queue_depth(self) -> int:
         return len(self._queue)
 
-    def submit(self, prompt, max_new: int) -> Job:
+    def submit(self, prompt, max_new: int, *, deadline_s: float | None = None,
+               retries: int = 0, backoff_s: float = 0.002) -> Job:
         """Admit a request, or reject it when the queue is full.
 
-        Never blocks and never grows the queue past ``max_queue`` — the
-        caller sees REJECTED and retries later (or sheds load)."""
+        Graceful degradation instead of a hard cliff: ``retries`` > 0
+        re-attempts a full-queue admission with exponential backoff
+        (``backoff_s`` doubling each attempt, lock released while
+        sleeping) before giving up with REJECTED, and ``deadline_s``
+        bounds how long the job may sit unfinished — :meth:`pump`
+        expires overdue queued jobs to TIMED_OUT rather than serving
+        them arbitrarily late.  With the defaults the call never blocks
+        and the queue never grows past ``max_queue``."""
+        delay = float(backoff_s)
+        for attempt in range(int(retries) + 1):
+            with self._lock:
+                if len(self._queue) < self.max_queue:
+                    rid = self._next_rid
+                    self._next_rid += 1
+                    req = Request(rid=rid,
+                                  prompt=np.asarray(prompt, np.int32),
+                                  max_new=int(max_new))
+                    job = Job(rid=rid, request=req, status=QUEUED,
+                              deadline=(None if deadline_s is None
+                                        else time.monotonic() + deadline_s))
+                    self.jobs[rid] = job
+                    self._queue.append(job)
+                    self.admitted += 1
+                    self.peak_queue_depth = max(self.peak_queue_depth,
+                                                len(self._queue))
+                    return job
+            if attempt < retries:
+                time.sleep(delay)     # outside the lock: let pump() drain
+                delay *= 2
         with self._lock:
             rid = self._next_rid
             self._next_rid += 1
             req = Request(rid=rid,
                           prompt=np.asarray(prompt, np.int32),
                           max_new=int(max_new))
-            if len(self._queue) >= self.max_queue:
-                job = Job(rid=rid, request=req, status=REJECTED)
-                self.jobs[rid] = job
-                self.rejected += 1
-                return job
-            job = Job(rid=rid, request=req, status=QUEUED)
+            job = Job(rid=rid, request=req, status=REJECTED)
             self.jobs[rid] = job
-            self._queue.append(job)
-            self.admitted += 1
-            self.peak_queue_depth = max(self.peak_queue_depth,
-                                        len(self._queue))
+            self.rejected += 1
             return job
 
     def status(self, rid: int) -> str:
@@ -166,16 +189,28 @@ class ServeFrontend:
                 raise KeyError(f"unknown rid {rid}")
             if job.status == REJECTED:
                 raise ValueError(f"rid {rid} was rejected (queue full)")
+            if job.status == TIMED_OUT:
+                raise ValueError(f"rid {rid} timed out before admission "
+                                 "(deadline_s elapsed in the queue)")
             return list(job.tokens) if job.status == DONE else None
 
     # -- the runner ----------------------------------------------------------
 
     def pump(self) -> bool:
-        """One scheduler turn: admit queued jobs onto free lanes, then
-        one decode step.  Returns True if any work remains."""
+        """One scheduler turn: expire overdue queued jobs, admit the
+        rest onto free lanes, then one decode step.  Returns True if
+        any work remains."""
         with self._lock:
+            now = time.monotonic()
             while self._queue:
                 job = self._queue[0]
+                if job.deadline is not None and now > job.deadline:
+                    # overdue before it ever ran: shed it rather than
+                    # serve a response nobody is waiting for anymore
+                    job.status = TIMED_OUT
+                    self.expired += 1
+                    self._queue.popleft()
+                    continue
                 if not self.engine.submit(job.request):
                     break   # decode lanes saturated: jobs wait, queue bounded
                 job.status = RUNNING
@@ -207,10 +242,19 @@ class ServeFrontend:
         self._runner.start()
 
     def stop(self, timeout: float = 30.0) -> None:
+        """Stop the runner and drain the engine.  ``join`` returning is
+        NOT success — a wedged runner leaves it alive past the timeout,
+        and silently continuing would drain the engine under a thread
+        still pumping it.  Raises RuntimeError in that case (the runner
+        is kept so a later ``stop`` can retry)."""
         if self._runner is None:
             return
         self._stop.set()
         self._runner.join(timeout)
+        if self._runner.is_alive():
+            raise RuntimeError(
+                f"serve-frontend runner failed to stop within {timeout}s "
+                "(thread still alive; engine NOT drained)")
         self._runner = None
         with self._lock:
             self.engine.drain()
@@ -218,7 +262,7 @@ class ServeFrontend:
     def stats(self) -> dict:
         with self._lock:
             return dict(admitted=self.admitted, rejected=self.rejected,
-                        completed=self.completed,
+                        completed=self.completed, expired=self.expired,
                         peak_queue_depth=self.peak_queue_depth,
                         queue_depth=len(self._queue),
                         busy_lanes=len(self.busy_lanes))

@@ -10,12 +10,22 @@ whichever DP ranks contributed, reweighting the mean by the live count.
 On a real deployment the live mask comes from the coordination service
 heartbeat; here it is an input, which also makes the policy unit-testable
 and lets tests inject failures deterministically.
+
+A third failure mode arrived with lossy transports (c): a rank is alive
+but its *communication* failed — a reliable put exhausted its
+retransmit budget and latched the sticky ``ERR_RETRY_EXHAUSTED`` bit.
+:func:`delivery_live_mask` folds that into the quorum: ranks whose
+delivery failed drop out of the live mask exactly like stragglers, so
+one bad link degrades the batch instead of corrupting the mean with a
+half-delivered contribution.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.state import ERR_RETRY_EXHAUSTED
 
 
 def quorum_mean_grads(grads, live: jnp.ndarray, axes):
@@ -32,6 +42,23 @@ def quorum_mean_grads(grads, live: jnp.ndarray, axes):
         return (jax.lax.psum(g, axes) / jnp.maximum(n_live, 1.0)).astype(g.dtype)
 
     return jax.tree.map(one, grads), n_live
+
+
+def delivery_live_mask(live: jnp.ndarray, error: jnp.ndarray,
+                       bits: int = ERR_RETRY_EXHAUSTED) -> jnp.ndarray:
+    """Fold comm-delivery failure into a quorum live mask.
+
+    ``live`` is this rank's heartbeat mask (() float {0,1}); ``error``
+    the rank's sticky PGAS error word (``PgasState.error``).  A rank
+    whose reliable put gave up (``ERR_RETRY_EXHAUSTED`` by default —
+    pass a wider ``bits`` mask to also drop on e.g. ``ERR_CRC``) is
+    treated as dead for this step's :func:`quorum_mean_grads`: its
+    gradient may be built on partially-delivered halo/parameter data,
+    so excluding it is the safe degradation.  Works traced (inside the
+    step) or on host values.
+    """
+    failed = (error.astype(jnp.int32) & bits) != 0
+    return live * jnp.where(failed, 0.0, 1.0).astype(live.dtype)
 
 
 def reshard_state(state, shardings):

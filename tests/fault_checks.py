@@ -1,0 +1,260 @@
+"""Multi-device lossy-transport semantics: the reliability protocol end
+to end on 8 host devices.  Run by tests/test_faults.py in a subprocess
+with XLA_FLAGS=--xla_force_host_platform_device_count=8.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ops
+from repro.core.address_space import GlobalAddressSpace
+from repro.core.faults import FaultModel
+from repro.core.state import (ERR_CRC, ERR_RETRY_EXHAUSTED, CrcError,
+                              RetryExhaustedError, ShoalContext,
+                              raise_on_error)
+from repro.runtime import TCP, LossyTransport, make_cpu_mesh
+from repro.training.elastic import delivery_live_mask
+
+N = 8
+RING = [(i, (i + 1) % N) for i in range(N)]
+MTU = 16                # 4 payload words per packet -> 16-word put = 4 segs
+PAY = 16
+
+
+def check(name):
+    print(f"[faults] {name}", flush=True)
+
+
+def build(transport, *, dedup=True, wait_timeout=True):
+    ctx = ShoalContext(mesh=make_cpu_mesh(N, ("kernel",)), axes=("kernel",),
+                       transport=transport, segment_words=64)
+    gas = GlobalAddressSpace(ctx)
+
+    def prog(st):
+        me = ctx.my_id()
+        pay = (jnp.arange(PAY, dtype=jnp.float32) + 1) * (me + 1)
+        st = ops.put_long(ctx, st, pay, RING, dst_addr=10, token=1,
+                          dedup=dedup)
+        return ops.wait_replies(ctx, st, token=1, n=1, timeout=wait_timeout)
+
+    return jax.jit(gas.spmd(prog)), gas
+
+
+def oracle_segment():
+    tcp_small = TCP.__class__(name="tcp", acked=True, max_packet_bytes=MTU)
+    fn, gas = build(tcp_small, wait_timeout=False)
+    return np.asarray(fn(gas.make_global_state()).segment)
+
+
+ORACLE = oracle_segment()
+
+
+def test_reliable_put_delivers_under_loss():
+    check("1%-drop acked 4-seg put: bit-identical, ledger drained, retried")
+    seen_retry = False
+    for seed in (7, 11, 19, 23):
+        t = LossyTransport(faults=FaultModel(drop=0.01, seed=seed),
+                           max_packet_bytes=MTU)
+        fn, gas = build(t)
+        st = fn(gas.make_global_state())
+        np.testing.assert_array_equal(np.asarray(st.segment), ORACLE)
+        assert (np.asarray(st.dedup_seen) == 0).all(), "ledger must drain"
+        assert (np.asarray(st.dedup_epoch)[:, 1] == 1).all()
+        assert (np.asarray(st.credits) == 0).all()
+        assert not (np.asarray(st.error) & ERR_RETRY_EXHAUSTED).any()
+        seen_retry |= bool((np.asarray(st.retransmits) > 0).any())
+    assert seen_retry, "no seed exercised a retransmit at 1% drop"
+
+
+def test_corruption_detected_and_recovered():
+    check("bit-corruption: ERR_CRC latched, retransmit still delivers")
+    t = LossyTransport(faults=FaultModel(drop=0.05, dup=0.02, corrupt=0.02,
+                                         seed=3),
+                       max_packet_bytes=MTU)
+    fn, gas = build(t)
+    st = fn(gas.make_global_state())
+    np.testing.assert_array_equal(np.asarray(st.segment), ORACLE)
+    assert (np.asarray(st.dedup_seen) == 0).all()
+    err = np.asarray(st.error)
+    assert (err & ERR_CRC).any(), "this seed corrupts at least one packet"
+    # raise_on_error decodes the bit to the named exception...
+    try:
+        raise_on_error(st, where="fault_checks")
+    except CrcError as e:
+        assert "ERR_CRC" in str(e)
+    else:
+        raise AssertionError("expected CrcError")
+    # ...and ignore= masks expected fault noise
+    raise_on_error(st, where="fault_checks", ignore=ERR_CRC)
+
+
+def test_duplicates_are_idempotent():
+    check("dup-heavy link: dedup ledger makes redelivery idempotent")
+    t = LossyTransport(faults=FaultModel(dup=0.5, seed=5),
+                       max_packet_bytes=MTU)
+    fn, gas = build(t)
+    st = fn(gas.make_global_state())
+    np.testing.assert_array_equal(np.asarray(st.segment), ORACLE)
+    assert (np.asarray(st.dedup_seen) == 0).all()
+    assert (np.asarray(st.error) == 0).all()
+
+
+def test_dedup_off_double_applies():
+    check("dedup=False + H_ADD: duplicates corrupt the accumulate")
+    ctx_t = LossyTransport(faults=FaultModel(dup=0.5, seed=5),
+                           max_packet_bytes=MTU)
+    ctx = ShoalContext(mesh=make_cpu_mesh(N, ("kernel",)), axes=("kernel",),
+                       transport=ctx_t, segment_words=64)
+    gas = GlobalAddressSpace(ctx)
+    from repro.core import handlers as hd
+
+    def prog(st, dedup):
+        pay = jnp.ones((PAY,), jnp.float32)
+        st = ops.put_long(ctx, st, pay, RING, dst_addr=10, token=1,
+                          handler=hd.H_ADD, dedup=dedup)
+        return ops.wait_replies(ctx, st, token=1, n=1, timeout=True)
+
+    st_on = jax.jit(gas.spmd(lambda s: prog(s, True)))(
+        gas.make_global_state())
+    st_off = jax.jit(gas.spmd(lambda s: prog(s, False)))(
+        gas.make_global_state())
+    on = np.asarray(st_on.segment)[:, 10:10 + PAY]
+    off = np.asarray(st_off.segment)[:, 10:10 + PAY]
+    np.testing.assert_array_equal(on, 1.0)       # each word added once
+    assert (off > 1.0).any(), \
+        "without dedup a duplicated segment must double-apply H_ADD"
+
+
+def test_exhaustion_latches_and_elastic_drops():
+    check("100% drop: ERR_RETRY_EXHAUSTED -> quorum mask drops ranks")
+    t = LossyTransport(faults=FaultModel(drop=1.0, seed=0),
+                       max_packet_bytes=MTU)
+    fn, gas = build(t)
+    st = fn(gas.make_global_state())
+    err = np.asarray(st.error)
+    assert (err & ERR_RETRY_EXHAUSTED).all(), "every sender must exhaust"
+    # destination unchanged, no credit ever granted
+    assert (np.asarray(st.segment)[:, 10:10 + PAY] == 0).all()
+    try:
+        raise_on_error(st, where="fault_checks")
+    except RetryExhaustedError:
+        pass
+    else:
+        raise AssertionError("expected RetryExhaustedError")
+    live = delivery_live_mask(jnp.ones((N,), jnp.float32),
+                              jnp.asarray(err))
+    assert (np.asarray(live) == 0).all()
+    # a clean rank stays live
+    live1 = delivery_live_mask(jnp.asarray(1.0), jnp.asarray(0))
+    assert float(live1) == 1.0
+
+
+def test_wait_timeout_drains_partially():
+    check("wait_replies timeout=True: partial drain, no underflow latch")
+    t = LossyTransport(faults=FaultModel(drop=1.0, seed=0),
+                       max_packet_bytes=MTU)
+    ctx = ShoalContext(mesh=make_cpu_mesh(N, ("kernel",)), axes=("kernel",),
+                       transport=t, segment_words=64)
+    gas = GlobalAddressSpace(ctx)
+
+    def prog(st):
+        me = ctx.my_id()
+        pay = (jnp.arange(PAY, dtype=jnp.float32) + 1) * (me + 1)
+        st = ops.put_long(ctx, st, pay, RING, dst_addr=10, token=1)
+        # every put exhausted -> zero credits; a timeout wait takes what
+        # is there (nothing) instead of latching ERR_WAIT_UNDERFLOW
+        return ops.wait_replies(ctx, st, token=1, n=1, timeout=True)
+
+    st = jax.jit(gas.spmd(prog))(gas.make_global_state())
+    assert (np.asarray(st.credits) == 0).all()
+    err = np.asarray(st.error)
+    from repro.core.state import ERR_WAIT_UNDERFLOW
+    assert not (err & ERR_WAIT_UNDERFLOW).any()
+    assert (err & ERR_RETRY_EXHAUSTED).all()
+
+
+def test_async_lossy_fire_and_forget():
+    check("async put on lossy link: one attempt, losses are losses")
+    t = LossyTransport(faults=FaultModel(drop=0.3, seed=9), acked=False,
+                       max_packet_bytes=MTU)
+    ctx = ShoalContext(mesh=make_cpu_mesh(N, ("kernel",)), axes=("kernel",),
+                       transport=t, segment_words=64)
+    gas = GlobalAddressSpace(ctx)
+
+    def prog(st):
+        me = ctx.my_id()
+        pay = (jnp.arange(PAY, dtype=jnp.float32) + 1) * (me + 1)
+        return ops.put_long(ctx, st, pay, RING, dst_addr=10, token=1,
+                            asynchronous=True)
+
+    st = jax.jit(gas.spmd(prog))(gas.make_global_state())
+    seg = np.asarray(st.segment)[:, 10:10 + PAY]
+    assert (seg != ORACLE[:, 10:10 + PAY]).any(), \
+        "30% drop must lose something (no retransmit on async)"
+    assert (np.asarray(st.retransmits) == 0).all()
+    assert not (np.asarray(st.error) & ERR_RETRY_EXHAUSTED).any()
+
+
+def test_unprotected_ops_refuse_lossy():
+    check("ops without a protocol refuse lossy transports at trace time")
+    t = LossyTransport(faults=FaultModel(drop=0.01, seed=1),
+                       max_packet_bytes=MTU)
+    ctx = ShoalContext(mesh=make_cpu_mesh(N, ("kernel",)), axes=("kernel",),
+                       transport=t, segment_words=64)
+    gas = GlobalAddressSpace(ctx)
+    for fn in (
+        lambda st: ops.put_short(ctx, st, RING),
+        lambda st: ops.get_long(ctx, st, RING, src_addr=0, nwords=4,
+                                dst_addr=8, token=2),
+    ):
+        try:
+            jax.jit(gas.spmd(fn))(gas.make_global_state())
+        except NotImplementedError as e:
+            assert "lossy" in str(e)
+        else:
+            raise AssertionError("expected NotImplementedError")
+
+
+def test_determinism_across_traces():
+    check("same seed, two fresh traces: identical faulted outcome")
+    t = LossyTransport(faults=FaultModel(drop=0.05, dup=0.05, corrupt=0.05,
+                                         seed=13),
+                       max_packet_bytes=MTU)
+    outs = []
+    for _ in range(2):
+        fn, gas = build(t)
+        st = fn(gas.make_global_state())
+        outs.append((np.asarray(st.segment).copy(),
+                     np.asarray(st.retransmits).copy(),
+                     np.asarray(st.error).copy(),
+                     np.asarray(st.tx_words).copy()))
+    for a, b in zip(outs[0], outs[1]):
+        np.testing.assert_array_equal(a, b)
+    # a different seed gives a different fault history (retransmit or
+    # tx pattern differs for at least one of these seeds)
+    t2 = LossyTransport(faults=FaultModel(drop=0.05, dup=0.05, corrupt=0.05,
+                                          seed=14),
+                        max_packet_bytes=MTU)
+    fn2, gas2 = build(t2)
+    st2 = fn2(gas2.make_global_state())
+    assert not (np.array_equal(np.asarray(st2.tx_words), outs[0][3])
+                and np.array_equal(np.asarray(st2.error), outs[0][2])
+                and np.array_equal(np.asarray(st2.retransmits), outs[0][1]))
+
+
+def main():
+    test_reliable_put_delivers_under_loss()
+    test_corruption_detected_and_recovered()
+    test_duplicates_are_idempotent()
+    test_dedup_off_double_applies()
+    test_exhaustion_latches_and_elastic_drops()
+    test_wait_timeout_drains_partially()
+    test_async_lossy_fire_and_forget()
+    test_unprotected_ops_refuse_lossy()
+    test_determinism_across_traces()
+    print("FAULT_CHECKS_ALL_PASS")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,373 @@
+"""Lossy-transport resilience: CRC property tests, deterministic fault
+seeding, the error-bit registry, R5 lint rule, and the graceful-
+degradation satellites (frontend deadlines/backoff, checkpoint
+checksums).  Multi-device protocol semantics run in a subprocess
+(tests/fault_checks.py)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from conftest import run_subprocess_checks
+
+
+def test_fault_semantics_multidevice():
+    out = run_subprocess_checks("fault_checks.py", n_devices=8, timeout=1500)
+    assert "FAULT_CHECKS_ALL_PASS" in out
+
+
+# -- CRC seal ---------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["float32", "int32", "uint32"])
+@pytest.mark.parametrize("nseg", [1, 2, 4])
+def test_crc_detects_every_single_bit_flip(dtype, nseg):
+    import jax.numpy as jnp
+
+    from repro.core import am
+
+    rng = np.random.default_rng(hash((dtype, nseg)) % (2 ** 31))
+    W = 4
+    pay = rng.integers(-2 ** 31, 2 ** 31, size=(nseg, W),
+                       dtype=np.int64).astype(np.int32)
+    pkt = np.zeros((nseg, am.HDR_WORDS + W), np.int32)
+    pkt[:, 0] = am.LONG
+    pkt[:, am.HDR_WORDS:] = pay.view(np.int32) if dtype == "int32" else pay
+    sealed = np.asarray(am.seal_packet(jnp.asarray(pkt)))
+    assert bool(np.asarray(am.packet_crc_ok(jnp.asarray(sealed))).all())
+    width = sealed.shape[-1]
+    for row in range(nseg):
+        for bit in range(width * 32):
+            corr = sealed.copy()
+            u = corr[row].view(np.uint32)
+            u[bit // 32] ^= np.uint32(1) << np.uint32(bit % 32)
+            ok = np.asarray(am.packet_crc_ok(jnp.asarray(corr)))
+            assert not ok[row], (row, bit)
+            # other rows untouched -> still sealed
+            assert ok.sum() == nseg - 1
+
+
+def test_crc_nop_row_is_sealed_zero():
+    import jax.numpy as jnp
+
+    from repro.core import am
+
+    z = jnp.zeros((3, am.HDR_WORDS + 4), jnp.int32)
+    assert int(np.asarray(am.packet_crc(z)).sum()) == 0
+    assert bool(np.asarray(am.packet_crc_ok(z)).all())
+    # seal is idempotent
+    s1 = am.seal_packet(z)
+    np.testing.assert_array_equal(np.asarray(s1),
+                                  np.asarray(am.seal_packet(s1)))
+
+
+# -- deterministic fault process -------------------------------------------
+
+def test_fault_draws_deterministic_and_decorrelated():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import am
+    from repro.core import faults as flt
+
+    fm = flt.FaultModel(drop=0.3, dup=0.2, corrupt=0.1, seed=42)
+    rows = jnp.tile(
+        am.seal_packet(jnp.arange(am.HDR_WORDS + 4, dtype=jnp.int32)
+                       .at[0].set(am.LONG))[None], (4, 1))
+    keyspace = [(r, t, e, rnd, d)
+                for r in (0, 3) for t in (1, 2) for e in (1, 2)
+                for rnd in (0, 1) for d in (flt.DIR_DATA, flt.DIR_REPLY)]
+    outs = {}
+    for args in keyspace:
+        k = flt.fault_key(fm, *args)
+        out, dupm = flt.inject(rows, k, 0.5, 0.5, 0.5)
+        outs[args] = (np.asarray(out), np.asarray(dupm))
+        # same key -> identical draws (trace-independent reproducibility)
+        out2, dupm2 = flt.inject(rows, k, 0.5, 0.5, 0.5)
+        np.testing.assert_array_equal(np.asarray(out2), outs[args][0])
+        np.testing.assert_array_equal(np.asarray(dupm2), outs[args][1])
+    # different (receiver/token/epoch/round/direction) -> not all equal
+    distinct = {o[0].tobytes() for o in outs.values()}
+    assert len(distinct) > 1
+
+
+def test_faults_only_touch_live_rows():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import faults as flt
+
+    rows = jnp.zeros((4, 20), jnp.int32)       # all NOP
+    k = flt.fault_key(flt.FaultModel(seed=1), 0, 1, 1, 0, flt.DIR_DATA)
+    out, dupm = flt.inject(rows, k, 1.0, 1.0, 1.0)
+    np.testing.assert_array_equal(np.asarray(out), 0)
+    assert not np.asarray(dupm).any()
+
+
+def test_fault_model_validation():
+    from repro.core.faults import FaultModel
+
+    with pytest.raises(ValueError):
+        FaultModel(drop=1.5)
+    with pytest.raises(ValueError):
+        FaultModel(corrupt=-0.1)
+    assert FaultModel().lossless
+    assert not FaultModel(dup=0.1).lossless
+
+
+def test_lossy_transport_construction():
+    from repro.core.faults import FaultModel
+    from repro.runtime import LossyTransport, is_lossy
+    from repro.runtime.transport import TCP, LinkClass
+
+    with pytest.raises(ValueError):
+        LossyTransport()                        # needs a FaultModel
+    with pytest.raises(ValueError):
+        LossyTransport(faults=FaultModel(drop=0.1), max_retries=-1)
+    t = LossyTransport(faults=FaultModel(drop=0.1, seed=2))
+    assert is_lossy(t) and not is_lossy(TCP)
+    assert not is_lossy(LossyTransport(faults=FaultModel()))
+    assert t.probs_for(0, 1) == (0.1, 0.0, 0.0)
+    assert t.probs_for(2, 2) == (0.0, 0.0, 0.0)     # LOCAL stays clean
+    # custom link classifier: everything ICI -> lossless
+    t2 = dataclasses.replace(t, link_of=lambda s, d: LinkClass.ICI)
+    assert t2.probs_for(0, 1) == (0.0, 0.0, 0.0)
+
+
+# -- error-bit registry -----------------------------------------------------
+
+def test_error_registry_decodes_all_bits():
+    import jax.numpy as jnp
+
+    from repro.core import state as st
+
+    s = st.PgasState.make(8)
+    assert st.raise_on_error(s) is s
+    for bit, exc in ((st.ERR_WAIT_UNDERFLOW, st.WaitUnderflowError),
+                     (st.ERR_CRC, st.CrcError),
+                     (st.ERR_RETRY_EXHAUSTED, st.RetryExhaustedError)):
+        bad = dataclasses.replace(s, error=jnp.asarray(bit, jnp.int32))
+        with pytest.raises(exc):
+            st.raise_on_error(bad, where="test")
+        assert st.raise_on_error(bad, ignore=bit) is bad
+    # multiple bits: lowest decodes first
+    bad = dataclasses.replace(
+        s, error=jnp.asarray(st.ERR_CRC | st.ERR_RETRY_EXHAUSTED, jnp.int32))
+    with pytest.raises(st.CrcError):
+        st.raise_on_error(bad)
+    with pytest.raises(st.RetryExhaustedError):
+        st.raise_on_error(bad, ignore=st.ERR_CRC)
+    assert st.error_names(st.ERR_CRC | st.ERR_RETRY_EXHAUSTED) == (
+        "ERR_CRC", "ERR_RETRY_EXHAUSTED")
+    # unregistered bits fail loudly instead of passing silently
+    bad = dataclasses.replace(s, error=jnp.asarray(1 << 20, jnp.int32))
+    with pytest.raises(st.ShoalError, match="unregistered"):
+        st.raise_on_error(bad)
+
+
+def test_register_error_bit_validation():
+    from repro.core import state as st
+
+    with pytest.raises(ValueError):
+        st.register_error_bit(3, "NOT_A_POWER")
+    with pytest.raises(ValueError):
+        st.register_error_bit(st.ERR_CRC, "CLASH")
+
+
+# -- R5 lint rule -----------------------------------------------------------
+
+def _ev(seq, **kw):
+    from repro.analysis.trace import CommEvent
+
+    kw.setdefault("op", "put_long")
+    kw.setdefault("pattern", ((0, 1),))
+    return CommEvent(seq=seq, **kw)
+
+
+def test_r5_flags_retransmit_without_dedup():
+    from repro.analysis.report import ERROR, WARNING
+    from repro.analysis.rules import check_r5
+
+    bad = check_r5([_ev(0, lossy=True, acked=True, retries=4, dedup=False)])
+    assert len(bad) == 1 and bad[0].rule == "R5" \
+        and bad[0].severity == ERROR
+    warn_noretry = check_r5([_ev(0, lossy=True, acked=True, retries=0)])
+    assert [f.severity for f in warn_noretry] == [WARNING]
+    warn_async = check_r5([_ev(0, lossy=True, acked=False)])
+    assert [f.severity for f in warn_async] == [WARNING]
+    assert not check_r5([_ev(0, lossy=True, acked=True, retries=4,
+                             dedup=True)])
+    assert not check_r5([_ev(0, lossy=False, acked=True)])
+
+
+def test_r3_timeout_wait_not_underflow():
+    from repro.analysis.rules import check_r3
+
+    # n=2 waited, only 1 issued: hard wait errors, timeout wait does not
+    hard = check_r3([_ev(0, acked=True, token=1),
+                     _ev(1, op="wait_replies", token=1, wait_n=2)])
+    assert any(f.rule == "R3" for f in hard)
+    soft = check_r3([_ev(0, acked=True, token=1),
+                     _ev(1, op="wait_replies", token=1, wait_n=2,
+                         timeout=True)])
+    assert not soft
+
+
+# -- frontend graceful degradation -----------------------------------------
+
+class _FakeEngine:
+    """Minimal ServeEngine surface: `lanes` concurrent jobs, each done
+    after `steps_per_job` steps."""
+
+    def __init__(self, lanes=1, steps_per_job=1):
+        self.lanes, self.steps_per_job = lanes, steps_per_job
+        self.running: dict[int, int] = {}
+        self.drained = 0
+
+    def submit(self, req) -> bool:
+        if len(self.running) >= self.lanes:
+            return False
+        self.running[req.rid] = self.steps_per_job
+        return True
+
+    def step(self):
+        for rid in list(self.running):
+            self.running[rid] -= 1
+            if self.running[rid] <= 0:
+                del self.running[rid]
+
+    def drain(self):
+        self.drained += 1
+
+    @property
+    def idle(self):
+        return not self.running
+
+
+def test_frontend_deadline_expires_queued_jobs():
+    from repro.serving.frontend import ServeFrontend, TIMED_OUT
+
+    fe = ServeFrontend(_FakeEngine(lanes=1, steps_per_job=3), max_queue=8)
+    slow = fe.submit([1], 4)                   # occupies the single lane
+    late = fe.submit([2], 4, deadline_s=0.0)   # expires before admission
+    fe.pump()
+    assert fe.status(slow.rid) == "running"
+    fe.pump()
+    assert fe.status(late.rid) == TIMED_OUT
+    assert fe.stats()["expired"] == 1
+    with pytest.raises(ValueError, match="timed out"):
+        fe.result(late.rid)
+
+
+def test_frontend_backoff_retry_then_reject():
+    import threading
+
+    from repro.serving.frontend import ServeFrontend
+
+    fe = ServeFrontend(_FakeEngine(lanes=1, steps_per_job=1), max_queue=1)
+    fe.submit([1], 1)
+    # queue full; a concurrent pump drains it during the backoff sleep
+    t = threading.Timer(0.02, fe.pump)
+    t.start()
+    job = fe.submit([2], 1, retries=8, backoff_s=0.01)
+    t.join()
+    assert job.status != "rejected"
+    # no pump: retries exhaust and the job is rejected, queue stays bounded
+    fe2 = ServeFrontend(_FakeEngine(), max_queue=1)
+    fe2.submit([1], 1)
+    job2 = fe2.submit([2], 1, retries=2, backoff_s=0.001)
+    assert job2.status == "rejected"
+    assert fe2.queue_depth == 1
+
+
+def test_frontend_stop_raises_on_wedged_runner():
+    import threading
+    import time as _time
+
+    from repro.serving.frontend import ServeFrontend
+
+    fe = ServeFrontend(_FakeEngine(), max_queue=2)
+    release = threading.Event()
+
+    # a pump that blocks until released simulates a wedged engine step
+    def wedged_pump():
+        release.wait(5.0)
+        return False
+
+    fe.pump = wedged_pump
+    fe.start(poll_s=0.001)
+    _time.sleep(0.01)
+    with pytest.raises(RuntimeError, match="failed to stop"):
+        fe.stop(timeout=0.05)
+    assert fe.engine.drained == 0      # never drained under a live runner
+    release.set()
+    fe.stop(timeout=5.0)               # second stop succeeds
+    assert fe.engine.drained == 1
+
+
+def test_frontend_stop_clean():
+    from repro.serving.frontend import ServeFrontend
+
+    fe = ServeFrontend(_FakeEngine(), max_queue=2)
+    fe.start(poll_s=0.001)
+    fe.submit([1], 1)
+    fe.stop(timeout=5.0)
+    assert fe.engine.drained == 1
+
+
+# -- checkpoint checksum ----------------------------------------------------
+
+def test_checkpoint_checksum_error_names_digests(tmp_path):
+    import jax.numpy as jnp
+
+    from repro.checkpoint import CheckpointManager, ChecksumError
+
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"w": jnp.arange(8, dtype=jnp.float32)}
+    mgr.save(1, tree)
+    # verified restore round-trips
+    out, _ = mgr.restore(tree, verify=True)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.arange(8))
+    # corrupt the leaf file persistently: re-read retry must still fail
+    d = tmp_path / "step_00000001"
+    leaf = next(p for p in d.iterdir() if p.suffix == ".npy")
+    raw = bytearray(leaf.read_bytes())
+    raw[-1] ^= 0xFF
+    leaf.write_bytes(bytes(raw))
+    with pytest.raises(ChecksumError) as ei:
+        mgr.restore(tree, verify=True)
+    e = ei.value
+    assert e.path == "w" and e.file == leaf.name
+    assert e.expected != e.actual
+    assert e.expected in str(e) and e.actual in str(e)
+    assert isinstance(e, IOError)
+    # unverified restore still reads the (corrupt) bytes — opt-in check
+    mgr.restore(tree, verify=False)
+
+
+def test_checkpoint_checksum_transient_reread(tmp_path, monkeypatch):
+    """One torn read recovers: the first hash mismatches, the re-read
+    sees good bytes and the restore succeeds."""
+    import jax.numpy as jnp
+
+    from repro.checkpoint import CheckpointManager, checkpoint as ckpt_mod
+
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"w": jnp.arange(4, dtype=jnp.float32)}
+    mgr.save(2, tree)
+    real = ckpt_mod.hashlib.sha256
+    calls = {"n": 0}
+
+    class _Flaky:
+        def __init__(self, data):
+            self._h = real(data)
+            calls["n"] += 1
+            self._lie = calls["n"] == 1
+
+        def hexdigest(self):
+            return "0" * 64 if self._lie else self._h.hexdigest()
+
+    monkeypatch.setattr(ckpt_mod.hashlib, "sha256", _Flaky)
+    out, _ = mgr.restore(tree, verify=True)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.arange(4))
+    assert calls["n"] == 2
